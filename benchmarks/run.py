@@ -1,0 +1,323 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--rounds N]
+    [--full]
+
+Paper artifacts (CPU-feasible scale of §5's protocol):
+  fig1_heterogeneity   rolling vs random masking, high data heterogeneity
+  fig2_low_hetero      same, low heterogeneity (L=5)
+  fig3_capacity        model-homogeneous beta=1 vs beta=1/16 bounds
+  tab1_generalization  train-test gap: random masking vs full model
+  tab4_heterofl        rolling vs static (HeteroFL) masking
+  thm1_residual        convergence residual vs capacity on the quadratic
+                       (validates the Theorem-1 residual structure)
+  thm5_stability       neighboring-dataset stability, masked vs full
+
+System benches:
+  kernels              Pallas kernels vs jnp oracle timings (interpret mode)
+  fed_round            window-mode fed round wall time (reduced arch)
+  roofline             aggregate the dry-run JSONs into the roofline table
+
+Prints ``name,metric,value`` CSV rows and writes
+experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = {}
+ROWS = []
+
+
+def emit(name, metric, value):
+    ROWS.append(f"{name},{metric},{value}")
+    RESULTS.setdefault(name, {})[metric] = value
+    print(f"{name},{metric},{value}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Paper experiments
+# ---------------------------------------------------------------------------
+
+
+def _experiment(labels_per_client, rounds, seed=0, **kw):
+    from repro.core.paper_protocol import PaperExperiment
+    return PaperExperiment(n_clients=10, participate=4,
+                           labels_per_client=labels_per_client,
+                           n_train=1500, n_test=400, mb=8, seed=seed, **kw)
+
+
+def fig1_heterogeneity(rounds):
+    exp = _experiment(2, rounds)
+    for scheme in ("rolling", "random"):
+        r = exp.run(scheme, rounds=rounds)
+        emit("fig1_heterogeneity", f"{scheme}_final_test_loss",
+             round(r["final"]["test_loss"], 4))
+        emit("fig1_heterogeneity", f"{scheme}_final_test_acc",
+             round(r["final"]["test_acc"], 4))
+        RESULTS.setdefault("curves", {})[f"fig1_{scheme}"] = r["curve"]
+
+
+def fig2_low_hetero(rounds):
+    exp = _experiment(5, rounds)
+    for scheme in ("rolling", "random"):
+        r = exp.run(scheme, rounds=rounds)
+        emit("fig2_low_hetero", f"{scheme}_final_test_loss",
+             round(r["final"]["test_loss"], 4))
+        emit("fig2_low_hetero", f"{scheme}_final_test_acc",
+             round(r["final"]["test_acc"], 4))
+
+
+def fig3_capacity(rounds):
+    exp = _experiment(2, rounds)
+    for beta, tag in ((1.0, "beta1"), (0.0625, "beta1_16")):
+        r = exp.run("rolling", rounds=rounds, uniform_cap=beta)
+        emit("fig3_capacity", f"{tag}_final_test_acc",
+             round(r["final"]["test_acc"], 4))
+
+
+def tab1_generalization(rounds):
+    exp = _experiment(2, rounds)
+    for scheme in ("random", "full"):
+        r = exp.run(scheme, rounds=rounds)
+        emit("tab1_generalization", f"{scheme}_loss_gap",
+             round(r["gap"]["loss_gap"], 4))
+        emit("tab1_generalization", f"{scheme}_acc_gap",
+             round(r["gap"].get("acc_gap", 0.0), 4))
+
+
+def tab4_heterofl(rounds):
+    exp = _experiment(2, rounds)
+    for scheme in ("rolling", "static"):
+        r = exp.run(scheme, rounds=rounds)
+        emit("tab4_heterofl", f"{scheme}_final_test_acc",
+             round(r["final"]["test_acc"], 4))
+        emit("tab4_heterofl", f"{scheme}_final_test_loss",
+             round(r["final"]["test_loss"], 4))
+
+
+def thm1_residual(rounds):
+    """Masked training's excess suboptimality grows as capacity falls,
+    tracking the Theorem-1 residual term."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import SubmodelConfig
+    from repro.core.fedavg import make_mask_fed_round, run_rounds
+    from repro.core.theory import QuadraticProblem, thm1_residual as resid
+
+    prob = QuadraticProblem.make(n_clients=4, m=64, d=16, hetero=0.3, seed=0)
+    consts = prob.constants()
+    w_star = prob.w_star()
+    f_star = prob.global_loss(jnp.asarray(w_star, jnp.float32))
+    rng = np.random.default_rng(0)
+
+    def loss(w, batch):
+        A = prob.A.reshape(-1, prob.dim)[batch["idx"]]
+        b = prob.b.reshape(-1)[batch["idx"]]
+        r = A @ w["w"] - b
+        return 0.5 * jnp.mean(r * r), {}
+
+    def batches():
+        while True:
+            yield {"idx": jnp.asarray(rng.integers(0, 4 * 64, (2, 4, 16)))}
+
+    ab = {"w": jax.ShapeDtypeStruct((prob.dim,), jnp.float32)}
+    excesses = {}
+    for p in (1.0, 0.7, 0.4):
+        scfg = SubmodelConfig(scheme="bernoulli", capacity=p, local_steps=2,
+                              clients_per_round=4, client_lr=0.05)
+        fed = make_mask_fed_round(loss, scfg, ab, {"w": ("d_model",)},
+                                  np.full(4, p))
+        params, _ = run_rounds(fed, {"w": jnp.zeros(prob.dim)}, batches(),
+                               rounds * 10, jax.random.PRNGKey(1))
+        excess = prob.global_loss(params["w"]) - f_star
+        excesses[p] = float(excess)
+        bound = resid(consts["L"], consts["mu"], G=2.0, W=2.0, d=prob.dim,
+                      probs=np.full(4, p))
+        emit("thm1_residual", f"excess_p{p}", round(float(excess), 5))
+        emit("thm1_residual", f"bound_p{p}", round(bound, 3))
+    emit("thm1_residual", "monotone_in_masking",
+         int(excesses[0.4] >= excesses[0.7] >= excesses[1.0] - 1e-6))
+
+
+def thm5_stability(rounds):
+    """E||A(S)-A(S')|| on neighboring datasets: masked vs full training."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import SubmodelConfig
+    from repro.core.fedavg import make_mask_fed_round
+    from repro.core.stability import stability_experiment
+
+    d, n_per = 16, 32
+    rng = np.random.default_rng(0)
+    Xs = rng.standard_normal((4, n_per, d)).astype(np.float32)
+    w_true = rng.standard_normal(d).astype(np.float32)
+    ys = (Xs @ w_true + 0.1 * rng.standard_normal((4, n_per))).astype(
+        np.float32)
+    ab = {"w": jax.ShapeDtypeStruct((d,), jnp.float32)}
+
+    def make_batches(X, y):
+        brng = np.random.default_rng(42)
+
+        def gen():
+            while True:
+                idx = brng.integers(0, n_per, (2, 4, 8))
+                xb = np.stack([[X[c][idx[k, c]] for c in range(4)]
+                               for k in range(2)])
+                yb = np.stack([[y[c][idx[k, c]] for c in range(4)]
+                               for k in range(2)])
+                yield {"x": jnp.asarray(xb), "y": jnp.asarray(yb)}
+        return gen()
+
+    def loss(w, b):
+        r = jnp.einsum("md,d->m", b["x"], w["w"]) - b["y"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    dists = {}
+    for p, tag in ((1.0, "full"), (0.5, "masked")):
+        scfg = SubmodelConfig(scheme="bernoulli", capacity=p, local_steps=2,
+                              clients_per_round=4, client_lr=0.02)
+
+        def batches_fn(perturbed, seed, p=p):
+            Xp, yp = np.copy(Xs), np.copy(ys)
+            if perturbed:
+                prng = np.random.default_rng(123 + seed)
+                Xp[0, 0] = prng.standard_normal(d)
+                yp[0, 0] = prng.standard_normal()
+            return make_batches(Xp, yp)
+
+        def make_fed(p=p, scfg=scfg):
+            return make_mask_fed_round(loss, scfg, ab, {"w": ("d_model",)},
+                                       np.full(4, p))
+
+        # Theorem-5 regime: small steps, early stopping — path stability,
+        # not the (algorithm-independent) optimum shift, dominates.
+        dist, _ = stability_experiment(make_fed, {"w": jnp.zeros(d)},
+                                       batches_fn, rounds,
+                                       jax.random.PRNGKey(0), n_pairs=2)
+        dists[tag] = dist
+        emit("thm5_stability", f"{tag}_distance", round(dist, 6))
+    emit("thm5_stability", "masked_more_stable",
+         int(dists["masked"] <= dists["full"] + 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# System benches
+# ---------------------------------------------------------------------------
+
+
+def kernels(rounds):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.masked_update import masked_sgd_2d
+    from repro.kernels.rolling_matmul import rolling_matmul
+
+    p = jax.random.normal(jax.random.PRNGKey(0), (512, 1024))
+    m = (jax.random.uniform(jax.random.PRNGKey(1), p.shape) > 0.5).astype(
+        jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(2), p.shape)
+
+    for name, fn in (
+        ("masked_sgd_pallas", lambda: masked_sgd_2d(p, m, g, 0.1)),
+        ("masked_sgd_ref", lambda: ref.masked_sgd_ref(p, m, g, 0.1)),
+    ):
+        jfn = jax.jit(fn)
+        jax.block_until_ready(jfn())  # warmup/compile
+        t0 = time.time()
+        for _ in range(5):
+            jax.block_until_ready(jfn())
+        emit("kernels", f"{name}_us", round((time.time() - t0) / 5 * 1e6, 1))
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (256, 512))
+    w = jax.random.normal(jax.random.PRNGKey(4), (512, 1024))
+    err = float(jnp.max(jnp.abs(
+        rolling_matmul(x, w, 128, 256)
+        - ref.rolling_matmul_ref(x, w, 128, 256))))
+    emit("kernels", "rolling_matmul_maxerr", f"{err:.2e}")
+
+
+def fed_round(rounds):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import SubmodelConfig, get_reduced_config
+    from repro.core.fedavg import make_window_fed_round
+    from repro.data.synthetic import lm_batches
+    from repro.models import build_model
+
+    cfg = get_reduced_config("tinyllama_1_1b")
+    m = build_model(cfg, remat=False)
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.05,
+                          axes=("d_ff", "heads", "kv_heads"))
+    fed = make_window_fed_round(m.loss, scfg, m.abstract_params(), m.axes())
+    it = lm_batches(cfg.vocab, (2, 4, 2), 64)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    step = jax.jit(fed.round)
+    params, _ = step(params, batch, 0, jax.random.PRNGKey(1))  # compile
+    t0 = time.time()
+    n = 3
+    for r in range(n):
+        params, metrics = step(params, batch, r + 1, jax.random.PRNGKey(r))
+    jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
+    emit("fed_round", "window_round_ms",
+         round((time.time() - t0) / n * 1e3, 1))
+    emit("fed_round", "tokens_per_round", 2 * 4 * 2 * 64)
+
+
+def roofline(rounds):
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not files:
+        emit("roofline", "note", "no dryrun JSONs; run repro.launch.dryrun")
+        return
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        tag = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        emit("roofline", f"{tag}.bottleneck", r["bottleneck"])
+        emit("roofline", f"{tag}.step_lb_s", f"{r['step_lb_s']:.4g}")
+
+
+BENCHES = {
+    "fig1_heterogeneity": fig1_heterogeneity,
+    "fig2_low_hetero": fig2_low_hetero,
+    "fig3_capacity": fig3_capacity,
+    "tab1_generalization": tab1_generalization,
+    "tab4_heterofl": tab4_heterofl,
+    "thm1_residual": thm1_residual,
+    "thm5_stability": thm5_stability,
+    "kernels": kernels,
+    "fed_round": fed_round,
+    "roofline": roofline,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--rounds", type=int, default=12,
+                    help="base round budget (--full for paper-scale curves)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rounds = args.rounds * (5 if args.full else 1)
+
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,metric,value")
+    for n in names:
+        t0 = time.time()
+        BENCHES[n](rounds)
+        emit(n, "bench_seconds", round(time.time() - t0, 1))
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(RESULTS, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

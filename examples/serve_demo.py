@@ -1,0 +1,14 @@
+"""Batched serving demo: prefill + autoregressive decode with KV/SSM caches
+across three model families (attention, SSM, hybrid).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import subprocess
+import sys
+
+for arch in ("tinyllama_1_1b", "mamba2_130m", "hymba_1_5b"):
+    print(f"\n=== {arch} ===", flush=True)
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+         "--reduced", "--batch", "2", "--prompt-len", "16", "--gen", "8"],
+        check=True)

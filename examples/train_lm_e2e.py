@@ -1,0 +1,73 @@
+"""End-to-end driver: federated sub-model training of a language model for a
+few hundred rounds, with eval, checkpointing, and resume.
+
+    PYTHONPATH=src python examples/train_lm_e2e.py [--rounds 200]
+    [--resume ckpt.npz]
+
+A ~5M-param TinyLlama-family model (CPU-feasible; the identical entry point
+scales to the full configs on TPU) trained with rolling sub-model windows,
+capacity 0.5, 8 clients x 2 local steps, on synthetic bigram data whose
+optimal loss is well below ln(V) — the curve meaningfully converges.
+"""
+import argparse
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import load as ckpt_load, save as ckpt_save
+from repro.configs.base import SubmodelConfig, get_reduced_config
+from repro.core.fedavg import make_window_fed_round
+from repro.data.synthetic import lm_batches
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--ckpt", default="experiments/lm_e2e.npz")
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = replace(get_reduced_config("tinyllama_1_1b"),
+                  n_layers=2, d_model=128, d_ff=256, vocab=256,
+                  n_heads=4, n_kv_heads=2, head_dim=32)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    start = 0
+    if args.resume:
+        params, meta = ckpt_load(args.resume)
+        start = int(meta.get("round", 0))
+        print(f"resumed from {args.resume} at round {start}")
+
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=8, client_lr=0.2,
+                          axes=("d_ff", "heads", "kv_heads"))
+    fed = make_window_fed_round(model.loss, scfg, model.abstract_params(),
+                                model.axes())
+    step = jax.jit(fed.round)
+
+    it = lm_batches(cfg.vocab, (2, 8, 2), args.seq, seed=1)
+    eval_batch = {"tokens": jnp.asarray(
+        next(lm_batches(cfg.vocab, (16,), args.seq, seed=999))["tokens"])}
+    rng = jax.random.PRNGKey(1)
+    t0 = time.time()
+    for r in range(start, start + args.rounds):
+        rng, sub = jax.random.split(rng)
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, metrics = step(params, batch, r, sub)
+        if r % 20 == 0 or r == start + args.rounds - 1:
+            ev, _ = model.loss(params, eval_batch)
+            print(f"round {r:4d}  train {float(metrics['loss']):.4f}  "
+                  f"eval {float(ev):.4f}  "
+                  f"({(time.time()-t0)/max(r-start+1,1):.2f}s/round)",
+                  flush=True)
+    ckpt_save(args.ckpt, params, {"round": start + args.rounds,
+                                  "arch": cfg.name})
+    print("checkpoint ->", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

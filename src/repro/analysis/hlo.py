@@ -1,0 +1,88 @@
+"""Collective-traffic extraction from optimized (post-SPMD) HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse
+``compiled.as_text()`` and sum the bytes every collective moves per device:
+
+  all-gather        : output_bytes - input_bytes   (received data)
+  reduce-scatter    : input_bytes - output_bytes   (sent data)
+  all-reduce        : 2 x input_bytes x (g-1)/g    (ring send+recv)
+  all-to-all        : input_bytes x (g-1)/g
+  collective-permute: input_bytes
+
+This is the standard ring-model accounting; the roofline's collective term
+divides the total by the per-link ICI bandwidth.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE2.search(line)
+    if m:  # iota form [n_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{ ")
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind bytes moved per device (ring model)."""
+    out = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        out_shape, kind = m.group(1), m.group(2)
+        outb = _shape_bytes(out_shape)
+        # operand shapes: everything inside the call parens
+        args = line[m.end():]
+        inb = _shape_bytes(args.split("),")[0] if ")," in args else args)
+        g = _group_size(line)
+        if kind == "all-gather":
+            moved = max(outb - inb, 0) or outb * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = max(inb - outb, 0) or inb * (g - 1) / g
+        elif kind == "all-reduce":
+            moved = 2 * inb * (g - 1) / g
+        elif kind == "all-to-all":
+            moved = inb * (g - 1) / g
+        else:  # collective-permute
+            moved = inb
+        out[kind] += moved
+        counts[kind] += 1
+    out_d = dict(out)
+    out_d["total"] = float(sum(out.values()))
+    out_d["counts"] = dict(counts)
+    return out_d

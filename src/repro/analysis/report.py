@@ -1,0 +1,88 @@
+"""Assemble EXPERIMENTS.md tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def fmt(x):
+    if isinstance(x, float):
+        return f"{x:.3g}"
+    return str(x)
+
+
+def load_all(d):
+    rows = []
+    for f in sorted(glob.glob(f"{d}/*.json")):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def dryrun_table(rows, mesh="16x16"):
+    out = ["| arch | shape | FLOPs/dev | HBM B/dev | coll B/dev | "
+           "HBM/dev (GB) | compile |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        hbm = r.get("per_device_hbm_gb", float("nan"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(r['flops_per_dev'])} | "
+            f"{fmt(r['bytes_per_dev'])} | {fmt(r['coll_bytes_per_dev'])} | "
+            f"{hbm:.2f} | {r['compile_s']:.0f}s |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | step LB (s) | MODEL_FLOPS | useful |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(r['t_compute_s'])} | "
+            f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | "
+            f"**{r['bottleneck']}** | {fmt(r['step_lb_s'])} | "
+            f"{fmt(r['model_flops'])} | {r['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def collective_table(rows, mesh="16x16"):
+    out = ["| arch | shape | all-gather | all-reduce | reduce-scatter | "
+           "all-to-all | permute |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh or r["shape"].startswith("train") is False:
+            continue
+        c = r.get("collectives", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(c.get('all-gather', 0))} | "
+            f"{fmt(c.get('all-reduce', 0))} | "
+            f"{fmt(c.get('reduce-scatter', 0))} | "
+            f"{fmt(c.get('all-to-all', 0))} | "
+            f"{fmt(c.get('collective-permute', 0))} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    print("## Dry-run\n")
+    print(dryrun_table(rows, args.mesh))
+    print("\n## Roofline\n")
+    print(roofline_table(rows, args.mesh))
+    print("\n## Train collectives\n")
+    print(collective_table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

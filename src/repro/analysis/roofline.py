@@ -1,0 +1,98 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e target).
+
+The post-SPMD optimized HLO is the *per-device* program, so the trip-count-
+aware analyzer (repro.analysis.hlo_cost) yields per-device FLOPs / bytes /
+collective-bytes directly:
+
+  compute    = flops_per_dev / 197e12 bf16 FLOP/s
+  memory     = bytes_per_dev / 819e9 B/s HBM
+  collective = coll_bytes_per_dev / 50e9 B/s per ICI link
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (serve), and
+useful_ratio = MODEL_FLOPS / (flops_per_dev x chips) exposes remat/redundancy
+waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # B/s / chip
+ICI_BW = 50e9               # B/s / link
+
+
+@dataclass
+class Roofline:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    chips: int
+    model_flops: float       # global useful flops
+
+    @property
+    def t_compute(self):
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self):
+        return self.model_flops / max(self.flops_per_dev * self.chips, 1.0)
+
+    @property
+    def step_time_lower_bound(self):
+        """No-overlap upper bound is the sum; with perfect overlap the max."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def row(self):
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_lb_s": self.step_time_lower_bound,
+            "model_flops": self.model_flops,
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def active_params(cfg, abstract):
+    """Active-per-token params (MoE: only top_k + shared experts count)."""
+    import numpy as np
+    total = 0
+
+    def walk(t, path):
+        nonlocal total
+        if isinstance(t, dict):
+            for k, v in t.items():
+                walk(v, path + (k,))
+            return
+        n = int(np.prod(t.shape))
+        if cfg.moe is not None and "moe" in path and path[-1] in (
+                "w_gate", "w_up", "w_down") and "shared" not in path:
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+
+    walk(abstract, ())
+    return total
+
+
+def model_flops(cfg, abstract, tokens, kind="train"):
+    n = active_params(cfg, abstract)
+    per_tok = 6 * n if kind == "train" else 2 * n
+    return per_tok * tokens

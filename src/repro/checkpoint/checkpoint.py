@@ -1,0 +1,88 @@
+"""Pytree checkpointing: npz payload + json metadata, atomic writes.
+
+No orbax in this container; this is a small, tested, dependency-free store
+good enough for real runs (server model + optimizer state + round counter).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/#{i}" if prefix else f"#{i}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+
+    def fix(n):
+        if isinstance(n, dict):
+            if n and all("#" in k for k in n):
+                items = sorted(n.items(), key=lambda kv: int(
+                    kv[0].split("#")[-1]))
+                return tuple(fix(v) for _, v in items)
+            return {k: fix(v) for k, v in n.items()}
+        return n
+
+    return fix(root)
+
+
+def save(path: str, tree, metadata: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    arrays = {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype.name == "bfloat16":  # npz cannot store bf16 natively
+            a = a.view(np.uint16)
+        arrays[k] = a
+    dtypes = {k: str(np.asarray(v).dtype) for k, v in flat.items()}
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    meta = dict(metadata or {})
+    meta["dtypes"] = dtypes
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def load(path: str) -> Tuple[Any, dict]:
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    meta = {}
+    if os.path.exists(path + ".json"):
+        with open(path + ".json") as f:
+            meta = json.load(f)
+    for k, dt in meta.get("dtypes", {}).items():
+        if k in flat and "bfloat16" in dt:
+            import ml_dtypes
+            flat[k] = flat[k].view(ml_dtypes.bfloat16)
+    return _unflatten(flat), meta

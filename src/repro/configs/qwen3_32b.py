@@ -1,0 +1,21 @@
+"""Qwen3-32B [hf:Qwen/Qwen3-8B family] — qk_norm, GQA kv=8."""
+from repro.configs.base import ModelConfig, _shrink
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=25600,
+    vocab=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen3-8B",
+)
+
+
+def reduced():
+    return _shrink(CONFIG)

@@ -1,0 +1,31 @@
+"""The paper's own experimental model: pre-activated ResNet18 on CIFAR,
+modified per Section 5.1 — batch-norm replaced by *static* batch norm and a
+scalar module after each convolution.  Width-scalable for HeteroFL-style
+client capacities beta in {1, 1/2, 1/4, 1/8, 1/16}.
+
+This is not part of the 10-arch assignment; it exists so the paper's Figures
+1-4 / Tables 1-4 experiments run faithfully (at CPU-feasible scale via
+``reduced()``).
+"""
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet18-cifar"
+    stages: tuple = (2, 2, 2, 2)       # pre-act ResNet18 block counts
+    width: int = 64                    # stage-0 channels
+    n_classes: int = 10
+    image_size: int = 32
+    in_channels: int = 3
+    scaler: bool = True                # per-conv scalar module (paper §5.1)
+    source: str = "paper §5.1 (He et al. pre-act ResNet18 + HeteroFL mods)"
+
+
+CONFIG = ResNetConfig()
+
+
+def reduced():
+    # ResNet-8-ish: 1 block/stage, width 8, 16x16 inputs — CPU-friendly.
+    return replace(CONFIG, name="resnet8-cifar-reduced", stages=(1, 1, 1),
+                   width=8, image_size=16)

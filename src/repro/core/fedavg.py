@@ -1,0 +1,371 @@
+"""Distributed sub-model training rounds — Algorithms 1 & 2 of the paper.
+
+Two executable forms of one algorithm family:
+
+* **window mode** (`make_window_fed_round`) — the production TPU path.
+  Clients live on the mesh `data` (x `pod`) axis; each round every client
+  group extracts a *compact* sub-model (contiguous windows per semantic
+  axis), runs K local SGD steps (`lax.scan`), and the server applies the
+  fill-in average in delta form (sequential scatter-add, one full-model
+  accumulator) followed by the optional l2 projection.  The whole round is
+  one jitted SPMD program — this is what the multi-pod dry-run lowers.
+
+* **mask mode** (`make_mask_fed_round`) — the paper's literal formulation
+  with dense masks (supports unstructured Bernoulli masks of Algorithm 1 and
+  per-client heterogeneous capacities).  Used for the faithful experiments
+  and as the oracle for property tests (window mode == mask mode when the
+  masks are the window indicators).
+
+Batch layout (window mode): every batch leaf is [K, C, ...] — local-step
+major, then client.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SubmodelConfig
+from repro.core import extract as ex
+from repro.core import submodel as sm
+from repro.core.masking import WindowScheme, collect_axis_dims, make_scheme
+from repro.sharding.policy import constrain_tree
+
+
+# ---------------------------------------------------------------------------
+# Window (compact) mode — production path
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class WindowFedAvg:
+    loss_fn: Callable                   # loss_fn(params, batch) -> (loss, aux)
+    scfg: SubmodelConfig
+    abstract: Any                       # full-model ShapeDtypeStruct tree
+    axes_tree: Any
+    scheme: WindowScheme
+    spmd_axis: Any = None               # mesh axis pinning the client vmap
+
+    def _vmap(self, f, **kw):
+        if self.spmd_axis is not None:
+            return jax.vmap(f, spmd_axis_name=self.spmd_axis, **kw)
+        return jax.vmap(f, **kw)
+
+    def round(self, params, batch, round_idx, rng=None):
+        """One communication round.  batch leaves: [K, C, ...]."""
+        c = self.scfg
+        C = c.clients_per_round
+        if c.scheme == "importance":
+            offsets = self.scheme.importance_offsets(params, self.axes_tree,
+                                                     C)
+        else:
+            offsets = self.scheme.offsets(rng, round_idx, C)
+
+        if offsets:
+            sub0 = self._vmap(
+                lambda off: ex.extract(params, self.axes_tree, off,
+                                       self.scheme.sizes)
+            )(offsets)
+        else:  # full-model training: every client gets a replica
+            sub0 = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
+        sub0 = constrain_tree(sub0, self.axes_tree)
+
+        grad_fn = jax.value_and_grad(self.loss_fn, has_aux=True)
+
+        def kstep(carry, mb):
+            subp = carry
+            (loss, metrics), g = self._vmap(grad_fn)(subp, mb)
+            subp = jax.tree_util.tree_map(
+                lambda p, gr: p - c.client_lr * gr.astype(p.dtype), subp, g)
+            subp = constrain_tree(subp, self.axes_tree)
+            return subp, loss
+
+        subK, losses = jax.lax.scan(kstep, sub0, batch)
+        delta = jax.tree_util.tree_map(lambda a, b: a - b, subK, sub0)
+
+        # Aggregation (delta form of the paper's fill-in average).
+        if self.shared_window and offsets:
+            # Rolling/static without stagger: every client trains the SAME
+            # window (Algorithm 2), so average client deltas first (one
+            # sub-model-sized reduction over the client/data axis), then a
+            # single in-place scatter — instead of C full-model scatters.
+            off0 = {k: v[0] for k, v in offsets.items()}
+            dbar = jax.tree_util.tree_map(
+                lambda d: jnp.mean(d.astype(jnp.float32), axis=0), delta)
+            new = _scatter_update(params, dbar, self.abstract,
+                                  self.axes_tree, off0, self.scheme.sizes,
+                                  c.server_lr)
+        else:
+            def acc_step(acc, xs):
+                d_c, off_c = xs
+                full_d = ex.scatter_delta(d_c, self.abstract, self.axes_tree,
+                                          off_c, self.scheme.sizes)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), acc, full_d)
+                return constrain_tree(acc, self.axes_tree, leading=()), None
+
+            acc0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
+            acc, _ = jax.lax.scan(acc_step, acc0, (delta, offsets))
+            new = jax.tree_util.tree_map(
+                lambda w, d: (w + c.server_lr * d.astype(jnp.float32) / C
+                              ).astype(w.dtype), params, acc)
+        new = sm.project_l2(new, c.proj_radius)
+        return new, {"loss": losses.mean(), "client_loss": losses}
+
+    def round_with_server_opt(self, params, opt_state, batch, round_idx,
+                              server_opt, rng=None):
+        """Beyond-paper: treat the averaged client delta as a pseudo-gradient
+        for a stateful server optimizer (FedAvgM / FedAdam).
+
+        Runs the same client phase as :meth:`round`; the aggregation applies
+        ``server_opt.update`` on the full-shaped mean delta (momentum /
+        second-moment state is full-shaped; out-of-window coordinates see
+        delta 0, so their momentum decays — fill-in semantics preserved).
+        """
+        c = self.scfg
+        C = c.clients_per_round
+        offsets = self.scheme.offsets(rng, round_idx, C)
+        if offsets:
+            sub0 = self._vmap(
+                lambda off: ex.extract(params, self.axes_tree, off,
+                                       self.scheme.sizes))(offsets)
+        else:
+            sub0 = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
+        sub0 = constrain_tree(sub0, self.axes_tree)
+        grad_fn = jax.value_and_grad(self.loss_fn, has_aux=True)
+
+        def kstep(carry, mb):
+            subp = carry
+            (loss, metrics), g = self._vmap(grad_fn)(subp, mb)
+            subp = jax.tree_util.tree_map(
+                lambda p, gr: p - c.client_lr * gr.astype(p.dtype), subp, g)
+            return constrain_tree(subp, self.axes_tree), loss
+
+        subK, losses = jax.lax.scan(kstep, sub0, batch)
+        dbar = jax.tree_util.tree_map(
+            lambda a, b: jnp.mean(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32), axis=0),
+            subK, sub0)
+        if offsets:
+            off0 = {k: v[0] for k, v in offsets.items()}
+            full_delta = ex.scatter_delta(dbar, self.abstract,
+                                          self.axes_tree, off0,
+                                          self.scheme.sizes) \
+                if self.shared_window else None
+            if full_delta is None:
+                # staggered/random windows: average the per-client scatters
+                def acc_step(acc, xs):
+                    d_c, off_c = xs
+                    fd = ex.scatter_delta(d_c, self.abstract, self.axes_tree,
+                                          off_c, self.scheme.sizes)
+                    return jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(a.dtype) / C, acc, fd), None
+                delta_c = jax.tree_util.tree_map(
+                    lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                    subK, sub0)
+                z = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
+                full_delta, _ = jax.lax.scan(acc_step, z, (delta_c, offsets))
+        else:
+            full_delta = dbar
+        new, opt_state = server_opt.update(params, full_delta, opt_state)
+        new = sm.project_l2(new, c.proj_radius)
+        return new, opt_state, {"loss": losses.mean()}
+
+    @property
+    def shared_window(self):
+        import os
+        if os.environ.get("REPRO_NO_SHARED_WINDOW"):  # baseline repro knob
+            return False
+        return self.scfg.scheme in ("rolling", "static", "importance") \
+            and not self.scfg.stagger
+
+
+def _scatter_update(params, dbar, abstract, axes_tree, off0, sizes,
+                    server_lr):
+    """w[window] += lr * dbar, in place (single-window fast path)."""
+
+    def f(w, d, full, axes):
+        starts = [0] * w.ndim
+        for dim, key in ex._windowed_dims(full.shape, axes, sizes):
+            starts[dim] = off0[key]
+        cur = jax.lax.dynamic_slice(w, tuple(starts), d.shape)
+        upd = (cur.astype(jnp.float32)
+               + server_lr * d.astype(jnp.float32)).astype(w.dtype)
+        return jax.lax.dynamic_update_slice(w, upd, tuple(starts))
+
+    return ex._tree_map_with_axes2(
+        lambda pair, full, axes: f(pair[0], pair[1], full, axes),
+        jax.tree_util.tree_map(lambda a, b: (a, b), params, dbar,
+                               is_leaf=lambda x: not isinstance(x, dict)),
+        abstract, axes_tree)
+
+
+def make_window_fed_round(model_loss_fn, scfg: SubmodelConfig, abstract,
+                          axes_tree, spmd_axis=None) -> WindowFedAvg:
+    dims = collect_axis_dims(abstract, axes_tree)
+    scheme = make_scheme(scfg, dims)
+    return WindowFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
+                        axes_tree=axes_tree, scheme=scheme,
+                        spmd_axis=spmd_axis)
+
+
+# ---------------------------------------------------------------------------
+# Mask (dense) mode — paper-faithful path
+# ---------------------------------------------------------------------------
+
+
+def dense_client_masks(rng, abstract, axes_tree, scfg: SubmodelConfig,
+                       capacities, round_idx, windowed_dims=None):
+    """Masks [per-client pytrees stacked on leading C dim].
+
+    capacities: [C] float (per-client p_i / beta_i — heterogeneous OK).
+    """
+    C = capacities.shape[0]
+    if scfg.scheme == "full":
+        return jax.tree_util.tree_map(
+            lambda x: jnp.ones((C,) + x.shape, jnp.float32), abstract)
+    if scfg.scheme == "bernoulli":
+        keys = jax.random.split(jax.random.fold_in(rng, round_idx), C)
+        return jax.vmap(
+            lambda k, p: sm.bernoulli_masks(k, abstract, p)
+        )(keys, capacities)
+
+    # structured (rolling / static / random): windows per semantic axis with
+    # per-client traced offsets *and sizes* (dense masks allow ragged sizes).
+    dims = windowed_dims or collect_axis_dims(abstract, axes_tree)
+    keys = {k: i for i, k in enumerate(sorted(
+        [d for d in dims if d[0] in scfg.axes]))}
+
+    def client_mask(cap, ci):
+        def leaf(full, axes):
+            m = jnp.ones(full.shape, jnp.float32)
+            for d, name in enumerate(axes):
+                key = (name, int(full.shape[d]))
+                if key not in keys:
+                    continue
+                n = full.shape[d]
+                size = jnp.maximum(1, jnp.round(cap * n)).astype(jnp.int32)
+                if scfg.scheme == "static":
+                    off = jnp.zeros((), jnp.int32)
+                elif scfg.scheme == "rolling":
+                    R = max(int(round(1.0 / max(scfg.capacity, 1e-3))), 1)
+                    e, r = round_idx // R, round_idx % R
+                    perm = jax.random.permutation(
+                        jax.random.fold_in(jax.random.PRNGKey(scfg.seed), e),
+                        R)
+                    frac = perm[r] / max(R - 1, 1)
+                    off = jnp.round(frac * (n - size)).astype(jnp.int32)
+                else:  # random structured
+                    kk = jax.random.fold_in(jax.random.fold_in(
+                        jax.random.fold_in(jax.random.PRNGKey(scfg.seed),
+                                           round_idx), ci), keys[key])
+                    off = jax.random.randint(kk, (), 0, n)
+                idx = jnp.arange(n)
+                if scfg.wrap:
+                    sel = ((idx - off) % n) < size
+                else:
+                    off = jnp.minimum(off, n - size)
+                    sel = (idx >= off) & (idx < off + size)
+                shape = [1] * full.ndim
+                shape[d] = n
+                m = m * sel.reshape(shape).astype(jnp.float32)
+            return m
+
+        return ex._tree_map_with_axes(leaf, abstract, axes_tree)
+
+    return jax.vmap(client_mask)(capacities, jnp.arange(C))
+
+
+@dataclass
+class MaskFedAvg:
+    loss_fn: Callable
+    scfg: SubmodelConfig
+    abstract: Any
+    axes_tree: Any
+    capacities: jnp.ndarray            # [C]
+
+    def round(self, params, batch, round_idx, rng, capacities=None):
+        """batch leaves [K, C, ...].  capacities: optional per-round [C]
+        (heterogeneous participation — the paper's 10%-of-100-clients)."""
+        c = self.scfg
+        capacities = self.capacities if capacities is None else capacities
+        masks = dense_client_masks(rng, self.abstract, self.axes_tree, c,
+                                   capacities, round_idx)
+        C = capacities.shape[0]
+        w_c = jax.tree_util.tree_map(
+            lambda w, m: w[None] * m.astype(w.dtype), params, masks)
+
+        mvg = sm.masked_value_and_grad(self.loss_fn)
+
+        def kstep(carry, mb):
+            wc = carry
+            (loss, metrics), g = jax.vmap(mvg)(wc, masks, mb)
+            wc = jax.vmap(sm.masked_sgd_step, in_axes=(0, 0, 0, None))(
+                wc, masks, g, c.client_lr)
+            return wc, loss
+
+        w_cK, losses = jax.lax.scan(kstep, w_c, batch)
+        new = sm.fillin_average(params, w_cK, jax.tree_util.tree_map(
+            lambda m: m, masks))
+        new = sm.project_l2(new, c.proj_radius)
+        return new, {"loss": losses.mean(), "client_loss": losses}
+
+
+def make_mask_fed_round(model_loss_fn, scfg: SubmodelConfig, abstract,
+                        axes_tree, capacities) -> MaskFedAvg:
+    return MaskFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
+                      axes_tree=axes_tree,
+                      capacities=jnp.asarray(capacities, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Output model (hat-w) — paper's final one-step corrected output
+# ---------------------------------------------------------------------------
+
+
+def output_model(fed, params, batch, rng, lipschitz=1.0, round_idx=0):
+    """hat-w = P_W(w - (1/L) avg_i m_i ⊙ grad f_i(m_i ⊙ w))  (Alg. 1/2 output)."""
+    scfg = fed.scfg
+    if isinstance(fed, MaskFedAvg):
+        masks = dense_client_masks(rng, fed.abstract, fed.axes_tree, scfg,
+                                   fed.capacities, round_idx)
+        mvg = sm.masked_value_and_grad(fed.loss_fn)
+        w_c = jax.tree_util.tree_map(
+            lambda w, m: w[None] * m.astype(w.dtype), params, masks)
+        mb = jax.tree_util.tree_map(lambda x: x[0], batch)
+        (_, _), g = jax.vmap(mvg)(w_c, masks, mb)
+        gbar = jax.tree_util.tree_map(
+            lambda m, gr: (m * gr).mean(0), masks, g)
+        new = jax.tree_util.tree_map(
+            lambda w, d: w - d.astype(w.dtype) / lipschitz, params, gbar)
+        return sm.project_l2(new, scfg.proj_radius)
+    raise NotImplementedError("output_model is used by the mask-mode "
+                              "experiments")
+
+
+# ---------------------------------------------------------------------------
+# Training-loop driver (python loop over jitted rounds)
+# ---------------------------------------------------------------------------
+
+
+def run_rounds(fed, params, batch_iter, n_rounds, rng, jit=True,
+               callback=None):
+    step = fed.round
+    if jit:
+        step = jax.jit(step, static_argnames=())
+    history = []
+    for r in range(n_rounds):
+        rng, sub = jax.random.split(rng)
+        batch = next(batch_iter)
+        params, metrics = step(params, batch, r, sub)
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if callback:
+            callback(r, params, metrics)
+    return params, history

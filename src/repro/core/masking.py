@@ -1,0 +1,195 @@
+"""Sub-model selection schemes (the paper's core object).
+
+A *window assignment* describes, for every windowed semantic axis
+``(name, size)``, the contiguous unit range each client trains this round.
+Schemes:
+
+* ``full``    — m = 1 (FedAvg baseline).
+* ``static``  — HeteroFL: fixed offset 0 every round.
+* ``rolling`` — Algorithm 2 / FedRolex: the axis is partitioned into R
+  windows; each epoch (R rounds) the server draws a permutation sigma_e and
+  round r trains window sigma_e(r).  ``stagger=True`` additionally rotates
+  the permutation per client (beyond-paper: full coverage every round).
+* ``random``  — structured analogue of Algorithm 1: independent uniform
+  offsets per client per round.  (The *unstructured* Bernoulli masks of
+  Algorithm 1 live in ``repro.core.submodel.bernoulli_masks`` — dense-mask
+  mode.)
+* ``importance`` — beyond-paper (FIARSE-adjacent, Wu et al. 2024 cited in
+  §1): each round the server picks, per axis, the grid window with the
+  largest squared-weight mass, so clients train the currently-most-important
+  sub-model.  Offsets are data-dependent (traced from the live params via
+  :meth:`WindowScheme.importance_offsets`).
+
+Offsets are returned as traced int32 arrays ``[C]`` so the whole fed-round
+stays a single jitted program; window *sizes* are static (SPMD shapes).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SubmodelConfig
+
+AxisKey = Tuple[str, int]  # (semantic name, full dim size)
+
+NEVER_WINDOWED = {"layers", "vocab", "classes", "head_dim", "ssm_head_dim",
+                  "ssm_state", "conv_w", "conv_kh", "conv_kw", "mla_q_rank",
+                  "mla_kv_rank", "rope_dim", "v_head_dim", "codebooks",
+                  "vision_d", "none"}
+
+
+def collect_axis_dims(params_abstract, axes_tree) -> Dict[AxisKey, None]:
+    """Every (axis name, size) pair appearing in the model."""
+    dims: Dict[AxisKey, None] = {}
+
+    def walk(p, a):
+        if isinstance(p, dict):
+            for k in p:
+                walk(p[k], a[k])
+        else:
+            for d, name in zip(p.shape, a):
+                if name not in NEVER_WINDOWED:
+                    dims[(name, int(d))] = None
+
+    walk(params_abstract, axes_tree)
+    return dims
+
+
+def _align_down(x, a):
+    return (x // a) * a
+
+
+@dataclass
+class WindowScheme:
+    """Resolved window plan for one (model, SubmodelConfig) pair."""
+
+    cfg: SubmodelConfig
+    sizes: Dict[AxisKey, int]            # static window length per axis
+    grids: Dict[AxisKey, jnp.ndarray]    # rolling offset grid [R]
+    derived: Dict[AxisKey, Tuple[AxisKey, int]]  # heads <- (kv_heads, group)
+    n_windows: int                       # R
+
+    def importance_offsets(self, params, axes_tree, n_clients):
+        """Data-dependent offsets: per axis, the grid window with maximal
+        squared-weight mass (all clients share it, like rolling)."""
+        # accumulate per-unit importance for every windowed axis
+        mass: Dict[AxisKey, jnp.ndarray] = {}
+
+        def walk(t, a):
+            if isinstance(t, dict):
+                for k in t:
+                    walk(t[k], a[k])
+                return
+            for d, name in zip(range(t.ndim), a):
+                key = (name, int(t.shape[d]))
+                if key not in self.sizes or key in self.derived:
+                    continue
+                other = tuple(i for i in range(t.ndim) if i != d)
+                contrib = jnp.sum(jnp.square(t.astype(jnp.float32)),
+                                  axis=other)
+                mass[key] = mass.get(key, 0.0) + contrib
+
+        walk(params, axes_tree)
+        out = {}
+        for key, m in mass.items():
+            w = self.sizes[key]
+            csum = jnp.concatenate([jnp.zeros(1), jnp.cumsum(m)])
+            window_mass = csum[w:] - csum[:-w]          # [n-w+1]
+            grid = self.grids[key]
+            best = grid[jnp.argmax(window_mass[grid])]
+            out[key] = jnp.broadcast_to(best, (n_clients,)).astype(jnp.int32)
+        for k, (src, group) in self.derived.items():
+            out[k] = out[src] * group
+        return out
+
+    def offsets(self, rng, round_idx, n_clients) -> Dict[AxisKey, jnp.ndarray]:
+        """Per-client offsets {axis: [C] int32} for this round."""
+        c = self.cfg
+        out = {}
+        prim = [k for k in self.sizes if k not in self.derived]
+        if c.scheme in ("full", "static"):
+            for k in prim:
+                out[k] = jnp.zeros((n_clients,), jnp.int32)
+        elif c.scheme == "rolling":
+            R = self.n_windows
+            e = round_idx // R
+            r = round_idx % R
+            perm = jax.random.permutation(
+                jax.random.fold_in(jax.random.PRNGKey(c.seed), e), R)
+            for k in prim:
+                if c.stagger:
+                    idx = perm[(r + jnp.arange(n_clients)) % R]
+                else:
+                    idx = jnp.broadcast_to(perm[r], (n_clients,))
+                out[k] = self.grids[k][idx].astype(jnp.int32)
+        elif c.scheme == "importance":
+            # static fallback when params are unavailable: first grid window
+            for k in prim:
+                out[k] = jnp.broadcast_to(self.grids[k][0],
+                                          (n_clients,)).astype(jnp.int32)
+        elif c.scheme == "random":
+            for i, k in enumerate(prim):
+                kk = jax.random.fold_in(jax.random.fold_in(
+                    jax.random.PRNGKey(c.seed), round_idx), i)
+                n, w = k[1], self.sizes[k]
+                hi = max((n - w) // c.align + 1, 1)
+                out[k] = (jax.random.randint(kk, (n_clients,), 0, hi)
+                          * c.align).astype(jnp.int32)
+        else:
+            raise ValueError(c.scheme)
+        # derived axes follow their primary (GQA group coupling)
+        for k, (src, group) in self.derived.items():
+            out[k] = out[src] * group
+        return out
+
+
+def make_scheme(submodel_cfg: SubmodelConfig, axis_dims) -> WindowScheme:
+    c = submodel_cfg
+    windowed = {}
+    for (name, n) in axis_dims:
+        if name in c.axes and c.capacity < 1.0 and c.scheme != "full":  # noqa
+            windowed[(name, n)] = None
+
+    # GQA coupling: window kv_heads as primary, heads derived
+    derived = {}
+    kv_keys = {n: (name, n) for (name, n) in windowed if name == "kv_heads"}
+    for (name, n) in list(windowed):
+        if name == "heads":
+            for kvn, kvk in kv_keys.items():
+                if n % kvn == 0:
+                    derived[(name, n)] = (kvk, n // kvn)
+
+    sizes, grids = {}, {}
+    for key in windowed:
+        name, n = key
+        if key in derived:
+            src, group = derived[key]
+            continue  # size derived below
+        a = min(c.align, n)
+        w = max(a, _align_down(int(round(c.capacity * n)), a))
+        w = min(w, n)
+        sizes[key] = w
+        R = max(1, math.ceil(n / w))
+        if R == 1:
+            grid = jnp.zeros((1,), jnp.int32)
+        else:
+            grid = jnp.round(jnp.arange(R) * (n - w) / (R - 1)).astype(
+                jnp.int32)
+            grid = (grid // a) * a
+        grids[key] = grid
+
+    # resolve derived sizes/grids and global R
+    n_windows = max([int(g.shape[0]) for g in grids.values()] + [1])
+    # re-pad grids to common R (cycle)
+    for k, g in grids.items():
+        if g.shape[0] < n_windows:
+            reps = math.ceil(n_windows / g.shape[0])
+            grids[k] = jnp.tile(g, reps)[:n_windows]
+    for k, (src, group) in derived.items():
+        sizes[k] = sizes[src] * group
+    return WindowScheme(cfg=c, sizes=sizes, grids=grids, derived=derived,
+                        n_windows=n_windows)

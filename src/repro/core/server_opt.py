@@ -1,0 +1,87 @@
+"""Server-side optimizers for federated sub-model training (beyond-paper).
+
+The paper's server update is plain averaging (w += mean of client deltas).
+A production federated stack treats the averaged delta as a *pseudo-gradient*
+and applies a stateful server optimizer (Reddi et al., "Adaptive Federated
+Optimization"):
+
+* ``server_sgd``     — the paper's update (lr = server_lr), stateless.
+* ``server_momentum``— FedAvgM: m <- beta m + delta; w += lr m.
+* ``server_adam``    — FedAdam: adaptive per-coordinate server step.
+
+For sub-model training the pseudo-gradient is *windowed*: only coordinates
+inside the round's window carry signal.  Momentum/second-moment state is kept
+full-shaped; masked coordinates simply see delta = 0 (their momentum decays),
+which preserves the fill-in semantics of Algorithms 1 & 2.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ServerOpt(NamedTuple):
+    init: callable
+    update: callable  # (params, mean_delta, state) -> (params, state)
+
+
+def server_sgd(lr=1.0):
+    def init(params):
+        return ()
+
+    def update(params, delta, state):
+        new = jax.tree_util.tree_map(
+            lambda w, d: (w.astype(jnp.float32)
+                          + lr * d.astype(jnp.float32)).astype(w.dtype),
+            params, delta)
+        return new, state
+
+    return ServerOpt(init, update)
+
+
+def server_momentum(lr=1.0, beta=0.9):
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(params, delta, state):
+        m = jax.tree_util.tree_map(
+            lambda mm, d: beta * mm + d.astype(jnp.float32), state, delta)
+        new = jax.tree_util.tree_map(
+            lambda w, mm: (w.astype(jnp.float32) + lr * mm).astype(w.dtype),
+            params, m)
+        return new, m
+
+    return ServerOpt(init, update)
+
+
+def server_adam(lr=0.1, b1=0.9, b2=0.99, eps=1e-6):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, delta, state):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda mm, d: b1 * mm + (1 - b1) * d.astype(jnp.float32),
+            state["m"], delta)
+        v = jax.tree_util.tree_map(
+            lambda vv, d: b2 * vv + (1 - b2)
+            * jnp.square(d.astype(jnp.float32)), state["v"], delta)
+        def upd(w, mm, vv):
+            mhat = mm / (1 - b1 ** t)
+            vhat = vv / (1 - b2 ** t)
+            return (w.astype(jnp.float32)
+                    + lr * mhat / (jnp.sqrt(vhat) + eps)).astype(w.dtype)
+        new = jax.tree_util.tree_map(upd, params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return ServerOpt(init, update)
+
+
+SERVER_OPTS = {"sgd": server_sgd, "momentum": server_momentum,
+               "adam": server_adam}

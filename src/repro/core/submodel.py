@@ -1,0 +1,66 @@
+"""Dense-mask mode (the paper's literal formulation).
+
+Used for the paper-faithful experiments (small models, heterogeneous client
+capacities, unstructured Bernoulli masks of Algorithm 1) and as the oracle
+against which the compact window mode is property-tested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bernoulli_masks(rng, params_abstract, p, dtype=jnp.float32):
+    """Per-coordinate Bernoulli(p) masks, one leaf per parameter (Alg. 1)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params_abstract)
+    keys = jax.random.split(rng, len(leaves))
+    masks = [jax.random.bernoulli(k, p, l.shape).astype(dtype)
+             for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+def apply_mask(params, masks):
+    return jax.tree_util.tree_map(lambda p, m: p * m.astype(p.dtype),
+                                  params, masks)
+
+
+def masked_value_and_grad(loss_fn, has_aux=True):
+    """d/dw loss(m ⊙ w) = m ⊙ ∇f(m ⊙ w) — exactly the paper's local update."""
+
+    def wrapped(params, masks, *args):
+        def f(p):
+            return loss_fn(apply_mask(p, masks), *args)
+        return jax.value_and_grad(f, has_aux=has_aux)(params)
+
+    return wrapped
+
+
+def masked_sgd_step(params, masks, grads, lr):
+    return jax.tree_util.tree_map(
+        lambda p, m, g: p - lr * m.astype(p.dtype) * g, params, masks, grads)
+
+
+def fillin_average(server, client_params, masks):
+    """w_{r+1} = (1/N) sum_i (w_i + (1-m_i) ⊙ w_r)  — paper's aggregation,
+    computed in the algebraically identical delta form."""
+    def agg(w, ws, ms):
+        delta = (ms * (ws - w[None])).mean(0)
+        return w + delta.astype(w.dtype)
+    return jax.tree_util.tree_map(agg, server, client_params, masks)
+
+
+def project_l2(params, radius):
+    """P_W: projection onto the l2 ball of the given radius (0 = off)."""
+    if not radius:
+        return params
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(params))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda x: (x * scale).astype(x.dtype),
+                                  params)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))

@@ -1,0 +1,102 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+* ``masked_sgd_tree`` / ``fillin_agg_tree`` — apply the fused elementwise
+  kernels to whole parameter pytrees (leaves flattened and padded into the
+  rows x 128 lane layout the kernels expect).
+* ``rolling_matmul`` — re-export of the window matmul.
+* ``ssd_chunk_scan`` — full SSD mixer built on the intra-chunk kernel plus
+  the jnp inter-chunk recurrence; drop-in replacement for
+  ``repro.models.ssm.ssd_chunked`` (``use_pallas=True`` path).
+
+``interpret`` defaults to True in this CPU container; on TPU pass
+``interpret=False`` (same code path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_update import (LANE, fillin_agg_2d, masked_sgd_2d)
+from repro.kernels.rolling_matmul import rolling_matmul  # noqa: F401 (re-export)
+from repro.kernels.ssd_chunk import ssd_chunk_intra
+
+
+def _to_2d(x, cols=LANE * 8):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % cols
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, cols), x.shape, pad
+
+
+def _from_2d(y, shape, pad):
+    flat = y.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def masked_sgd_tree(params, masks, grads, lr, interpret=True):
+    """w <- w - lr * m * g over a whole pytree via the Pallas kernel."""
+
+    def leaf(p, m, g):
+        p2, shape, pad = _to_2d(p)
+        m2, _, _ = _to_2d(m.astype(p.dtype))
+        g2, _, _ = _to_2d(g.astype(p.dtype))
+        out = masked_sgd_2d(p2, m2, g2, lr, interpret=interpret)
+        return _from_2d(out, shape, pad)
+
+    return jax.tree_util.tree_map(leaf, params, masks, grads)
+
+
+def fillin_agg_tree(server, client_params, client_masks, server_lr=1.0,
+                    interpret=True):
+    """Paper aggregation (delta form) fused over the client axis."""
+
+    def leaf(w, wc, mc):
+        C = wc.shape[0]
+        w2, shape, pad = _to_2d(w)
+        wc2 = jnp.stack([_to_2d(wc[c].astype(w.dtype))[0] for c in range(C)])
+        mc2 = jnp.stack([_to_2d(mc[c].astype(w.dtype))[0] for c in range(C)])
+        out = fillin_agg_2d(w2, wc2, mc2, server_lr / C, interpret=interpret)
+        return _from_2d(out, shape, pad)
+
+    return jax.tree_util.tree_map(leaf, server, client_params, client_masks)
+
+
+def ssd_chunk_scan(xr, dt, A, Br, Cr, chunk, nh_block=0, interpret=True):
+    """Pallas-backed SSD: intra-chunk kernel + jnp inter-chunk recurrence.
+
+    Same contract as repro.models.ssm.ssd_chunked.
+    """
+    B, S, nh, hd = xr.shape
+    N = Br.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    xs = xr.reshape(B, nc, Q, nh, hd)
+    dts = dt.reshape(B, nc, Q, nh)
+    Bs = Br.reshape(B, nc, Q, N)
+    Cs = Cr.reshape(B, nc, Q, N)
+
+    y_intra, states = ssd_chunk_intra(xs, dts, A, Bs, Cs,
+                                      nh_block=nh_block, interpret=interpret)
+
+    dA = dts * A
+    L = jnp.cumsum(dA, axis=2)
+    dtot = dA.sum(2)                                    # [B,nc,nh]
+
+    def step(h, inp):
+        st, dt_c = inp
+        h_new = h * jnp.exp(dt_c)[:, :, None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    hT, h_entry = jax.lax.scan(step, h0, (states.transpose(1, 0, 2, 3, 4),
+                                          dtot.transpose(1, 0, 2)))
+    h_entry = h_entry.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cs, h_entry.astype(Cs.dtype),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(L)[..., None].astype(y_inter.dtype)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(B, S, nh, hd)
+    return y.astype(xr.dtype), hT

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_sgd_ref(p, m, g, lr):
+    return (p.astype(jnp.float32)
+            - lr * m.astype(jnp.float32) * g.astype(jnp.float32)
+            ).astype(p.dtype)
+
+
+def fillin_agg_ref(w, w_clients, m_clients, scale):
+    w32 = w.astype(jnp.float32)
+    acc = (m_clients.astype(jnp.float32)
+           * (w_clients.astype(jnp.float32) - w32[None])).sum(0)
+    return (w32 + scale * acc).astype(w.dtype)
+
+
+def rolling_matmul_ref(x, w, offset, win):
+    wsub = jax.lax.dynamic_slice_in_dim(w, offset, win, axis=1)
+    return jnp.dot(x, wsub, preferred_element_type=jnp.float32
+                   ).astype(x.dtype)
+
+
+def ssd_chunk_ref(x, dt, A, B, C):
+    """Sequential (recurrent) oracle for one chunk of SSD.
+
+    x [Q,nh,hd]; dt [Q,nh]; A [nh]; B,C [Q,N].
+    Returns y [Q,nh,hd] and final state [nh,hd,N].
+    """
+    Q, nh, hd = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A)                       # [nh]
+        h = h * decay[:, None, None] + jnp.einsum(
+            "hp,n,h->hpn", xt, Bt, dtt)
+        y = jnp.einsum("hpn,n->hp", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((nh, hd, N), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, (x.astype(jnp.float32), dt, B, C))
+    return ys, hT

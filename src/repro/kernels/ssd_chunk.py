@@ -1,0 +1,80 @@
+"""Pallas TPU kernel for the intra-chunk SSD block (Mamba-2 hot spot).
+
+One grid cell = (batch b, chunk c, head-block h): computes, entirely in VMEM,
+
+    dA   = dt ⊙ A,     L = cumsum(dA)
+    Y    = ((C Bᵀ) ⊙ exp(L_q − L_t) ⊙ 1[q≥t] ⊙ dt_t) X        (MXU dots)
+    S    = Σ_t exp(L_last − L_t)·dt_t · X_t ⊗ B_t              (chunk state)
+
+i.e. the quadratic-intra-chunk term and the chunk-exit state of the SSD
+block decomposition.  The O(S) inter-chunk recurrence (a tiny [nh,hd,N]
+scan) stays outside in jnp — see ``ops.ssd_chunk_scan``.
+
+Head-blocked so the [nh_b, Q, Q] decay tensor stays VMEM-resident
+(nh_b·Q²·4B ≤ ~4 MB at Q=128, nh_b=64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref):
+    x = x_ref[0, 0].astype(jnp.float32)       # [Q, nhb, hd]
+    dt = dt_ref[0, 0].astype(jnp.float32)     # [Q, nhb]
+    A = a_ref[...].astype(jnp.float32)        # [nhb]
+    B = b_ref[0, 0].astype(jnp.float32)       # [Q, N]
+    C = c_ref[0, 0].astype(jnp.float32)       # [Q, N]
+    Q = x.shape[0]
+
+    dA = dt * A                                # [Q, nhb]
+    L = jnp.cumsum(dA, axis=0)
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # [Q, Q]
+    Lh = L.T                                   # [nhb, Q]
+    diff = Lh[:, :, None] - Lh[:, None, :]     # [nhb, Q, Q]
+    causal = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    decay = jnp.where(causal[None], jnp.exp(diff), 0.0)
+    M = CB[None] * decay * dt.T[:, None, :]    # [nhb, Q, Q]
+    y = jnp.einsum("hqt,thp->qhp", M, x,
+                   preferred_element_type=jnp.float32)
+    sdecay = jnp.exp(Lh[:, -1:] - Lh) * dt.T   # [nhb, Q]
+    state = jnp.einsum("thp,tn,ht->hpn", x, B, sdecay,
+                       preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    s_ref[0, 0] = state
+
+
+def ssd_chunk_intra(x, dt, A, B, C, *, nh_block=0, interpret=True):
+    """x [Bt,nc,Q,nh,hd]; dt [Bt,nc,Q,nh]; A [nh]; B,C [Bt,nc,Q,N].
+
+    Returns (y_intra [Bt,nc,Q,nh,hd], states [Bt,nc,nh,hd,N] f32).
+    """
+    Bt, nc, Q, nh, hd = x.shape
+    N = B.shape[-1]
+    nhb = nh_block or nh
+    assert nh % nhb == 0
+    grid = (Bt, nc, nh // nhb)
+    out_shapes = (
+        jax.ShapeDtypeStruct((Bt, nc, Q, nh, hd), x.dtype),
+        jax.ShapeDtypeStruct((Bt, nc, nh, hd, N), jnp.float32),
+    )
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, nhb, hd), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, nhb), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((nhb,), lambda b, c, h: (h,)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, Q, nhb, hd), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, nhb, hd, N), lambda b, c, h: (b, c, h, 0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, dt, A, B, C)

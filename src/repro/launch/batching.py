@@ -1,0 +1,171 @@
+"""Continuous-batching serving engine (slot-based, vLLM-style scheduling on
+top of the model's prefill/decode steps).
+
+A fixed pool of B slots shares one KV cache laid out on a *global timeline*
+of capacity ``max_len``: a cohort of requests admitted at time t stores its
+prompt at absolute positions [t, t+width) (RoPE positions match via
+``prefill(pos_offset=t)``); every decode tick appends one position.  Exact
+per-slot attention is maintained with a [B, max_len] validity mask passed to
+``decode_step`` — a slot only sees its own prompt + generated tokens, never
+stale entries from retired requests or other cohorts' gaps.
+
+Scheduling is continuous: slots retire on EOS/max-new and are refilled from
+the queue immediately (no head-of-line blocking on long generations).  One
+jitted decode program serves all ticks (static shapes).
+
+Supported families: attention-based (dense/MoE/MLA/VLM-text).  SSM/hybrid
+recurrent state cannot be right-pad-masked without per-slot state swaps —
+use generation-level batching (`repro.launch.serve`) for those.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [len] int32
+    max_new: int = 16
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    completed: int = 0
+    tokens_generated: int = 0
+
+
+class ContinuousBatcher:
+    def __init__(self, model, params, batch_slots=4, max_len=512,
+                 eos_token: Optional[int] = None):
+        cfg = model.cfg
+        assert cfg.family not in ("ssm", "hybrid"), \
+            "recurrent state needs generation-level batching"
+        assert not cfg.sliding_window or max_len <= cfg.sliding_window
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.eos = eos_token
+        self.stats = EngineStats()
+        self._decode = jax.jit(
+            lambda p, t, c, pos, valid, rp: model.decode_step(
+                p, t, c, pos, valid=valid, rope_pos=rp))
+        self._cache = model.init_cache(batch_slots, max_len,
+                                       model.param_dtype)
+        self._valid = np.zeros((batch_slots, max_len), bool)
+        self._slot_req: List[Optional[Request]] = [None] * batch_slots
+        self._pos = 0
+        self._queue: List[Request] = []
+        self._vocab = cfg.vocab
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _admit(self):
+        empty = [i for i, r in enumerate(self._slot_req) if r is None]
+        if not empty or not self._queue:
+            return
+        cohort = []
+        while empty and self._queue:
+            cohort.append((empty.pop(0), self._queue.pop(0)))
+        width = max(len(r.prompt) for _, r in cohort)
+        if self._pos + width + 2 >= self.max_len:
+            self._queue = [r for _, r in cohort] + self._queue
+            return
+        toks = np.zeros((self.B, width), np.int32)
+        for slot, req in cohort:
+            toks[slot, :len(req.prompt)] = req.prompt      # right-pad
+        # RoPE positions are *logical* (0-based per request); the global
+        # timeline only decides where cache rows physically live.
+        logits, cache = self.model.prefill(
+            self.params, jnp.asarray(toks), max_len=self.max_len,
+            pos_offset=0, return_all_logits=True)
+        self._merge_cache(cache, width, [s for s, _ in cohort])
+        logits = np.asarray(logits)
+        for slot, req in cohort:
+            plen = len(req.prompt)
+            self._valid[slot, self._pos:self._pos + plen] = True
+            self._slot_req[slot] = req
+            req.out.append(int(np.argmax(logits[slot, plen - 1]))
+                           % self._vocab)
+        self._pos += width
+        self.stats.prefills += 1
+
+    def _merge_cache(self, fresh, width, cohort_slots):
+        sel = np.zeros((self.B,), bool)
+        sel[cohort_slots] = True
+        sel_j = jnp.asarray(sel)
+
+        def merge(path, old, new):
+            key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if key in ("k", "v", "c", "kr"):
+                # new: [L,B,maxlen,...] (padded); take [0:width), place at pos
+                seg = jax.lax.dynamic_slice_in_dim(new, 0, width, 2)
+                old_seg = jax.lax.dynamic_slice_in_dim(old, self._pos,
+                                                       width, 2)
+                shape = [1] * old.ndim
+                shape[1] = self.B
+                mixed = jnp.where(sel_j.reshape(shape), seg.astype(old.dtype),
+                                  old_seg)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    old, mixed, self._pos, 2)
+            return old
+
+        self._cache = jax.tree_util.tree_map_with_path(
+            merge, self._cache, fresh)
+
+    # -- decode ---------------------------------------------------------------
+    def step(self):
+        self._admit()
+        active = [i for i, r in enumerate(self._slot_req) if r is not None]
+        if not active:
+            return False
+        if self._pos + 1 >= self.max_len:
+            return False                                    # timeline full
+        tok = np.zeros((self.B,), np.int32)
+        rope_pos = np.zeros((self.B,), np.int32)
+        for i in active:
+            req = self._slot_req[i]
+            tok[i] = req.out[-1]
+            rope_pos[i] = len(req.prompt) + len(req.out) - 1  # logical pos
+        self._valid[active, self._pos] = True               # current token
+        logits, self._cache = self._decode(
+            self.params, jnp.asarray(tok), self._cache, self._pos,
+            jnp.asarray(self._valid), jnp.asarray(rope_pos))
+        self._pos += 1
+        self.stats.decode_steps += 1
+        nxt = np.asarray(logits)
+        for i in active:
+            req = self._slot_req[i]
+            t = int(np.argmax(nxt[i])) % self._vocab
+            req.out.append(t)
+            self.stats.tokens_generated += 1
+            if (self.eos is not None and t == self.eos) \
+                    or len(req.out) >= req.max_new + 1:
+                req.done = True
+                self.stats.completed += 1
+                self._slot_req[i] = None
+                self._valid[i, :] = False
+        return True
+
+    def run(self, max_ticks=100_000):
+        t0 = time.time()
+        while (self._queue or any(r is not None for r in self._slot_req)) \
+                and max_ticks > 0:
+            progressed = self.step()
+            if not progressed:
+                break
+            max_ticks -= 1
+        return time.time() - t0

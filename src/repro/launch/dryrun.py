@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: the dry-run builds the 256/512-chip
+#   production mesh out of host placeholder devices.  (Never set globally —
+#   smoke tests and benches see 1 device.)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh and record memory/cost/collective analyses.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_14b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+
+Without --arch/--shape, sweeps all 10 x 4 pairs.  Results are JSON files
+consumed by benchmarks/ and EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_cost import analyze
+from repro.analysis.roofline import Roofline, model_flops
+from repro.configs.base import INPUT_SHAPES, list_archs
+from repro.core.fedavg import make_window_fed_round
+from repro.launch.specs import make_plan
+from repro.sharding.ctx import activation_policy
+
+
+def step_fn(plan):
+    model, shape = plan.model, plan.shape
+    if plan.kind == "train":
+        spmd = os.environ.get("REPRO_SPMD_CLIENTS")
+        spmd_axis = None
+        if spmd:  # perf-iteration knob: pin client vmap to the data axis
+            spmd_axis = ("pod", "data") if plan.multi_pod else "data"
+        fed = make_window_fed_round(model.loss, plan.scfg,
+                                    model.abstract_params(), model.axes(),
+                                    spmd_axis=spmd_axis)
+
+        def train_step(params, batch, round_idx, rng):
+            return fed.round(params, batch, round_idx, rng)
+
+        return train_step
+    if plan.kind == "prefill":
+        def prefill_step(params, batch):
+            toks = batch["tokens"]
+            return model.prefill(params, toks, batch,
+                                 max_len=shape.seq_len)
+        return prefill_step
+
+    def serve_step(params, batch, cache, pos):
+        return model.decode_step(params, batch["tokens"], cache, pos,
+                                 mesh=plan.mesh, cp=plan.cp)
+
+    return serve_step
+
+
+def run_one(arch, shape_name, multi_pod=False, verbose=True, **plan_kw):
+    t0 = time.time()
+    plan = make_plan(arch, shape_name, multi_pod=multi_pod, **plan_kw)
+    fn = step_fn(plan)
+    res = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "capacity": plan.scfg.capacity, "scheme": plan.scfg.scheme}
+    donate = ()
+    if plan.kind == "train":
+        donate = (0,)            # server params update in place
+    elif plan.kind == "decode":
+        donate = (2,)            # KV/SSM cache updates in place
+    with plan.mesh, activation_policy(plan.act_policy):
+        jitted = jax.jit(fn, in_shardings=plan.in_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*plan.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    cost = analyze(hlo)     # trip-count-aware, per-device (post-SPMD HLO)
+
+    chips = 512 if multi_pod else 256
+    if plan.kind == "train":
+        tokens = (plan.scfg.local_steps * plan.shape.global_batch
+                  * plan.shape.seq_len)
+        kind = "train"
+    elif plan.kind == "prefill":
+        tokens = plan.shape.global_batch * plan.shape.seq_len
+        kind = "serve"
+    else:
+        tokens = plan.shape.global_batch  # one token per sequence
+        kind = "serve"
+    mflops = model_flops(plan.cfg, plan.model.abstract_params(), tokens,
+                         kind)
+    rl = Roofline(flops_per_dev=cost["flops"],
+                  bytes_per_dev=cost["bytes"] * 0.5,  # f32-lowered -> bf16
+                  coll_bytes_per_dev=cost["coll_bytes"] * 0.5,
+                  chips=chips, model_flops=mflops)
+    res["bytes_per_dev_f32_raw"] = cost["bytes"]
+    res.update(rl.row())
+    res["collectives"] = cost["coll_by_kind"]
+    res["collective_counts"] = cost["coll_counts"]
+    res["tokens"] = tokens
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        if mem is not None and hasattr(mem, attr):
+            res[attr] = int(getattr(mem, attr))
+    if "temp_size_in_bytes" in res:
+        res["per_device_hbm_gb"] = (
+            res.get("argument_size_in_bytes", 0)
+            + res.get("output_size_in_bytes", 0)
+            + res.get("temp_size_in_bytes", 0)) / chips / 2 ** 30
+    res["lower_s"] = round(t_lower, 1)
+    res["compile_s"] = round(t_compile, 1)
+    if verbose:
+        print(f"[OK] {arch:20s} {shape_name:12s} {res['mesh']:8s} "
+              f"flops/dev={rl.flops_per_dev:.3e} "
+              f"bytes/dev={rl.bytes_per_dev:.3e} "
+              f"coll/dev={rl.coll_bytes_per_dev:.3e} "
+              f"bneck={res['bottleneck']:10s} "
+              f"useful={res['useful_ratio']:.2f} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--capacity", type=float, default=None)
+    ap.add_argument("--scheme", default="rolling")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'mp' if mp else 'sp'}"
+                try:
+                    res = run_one(arch, shape, multi_pod=mp,
+                                  capacity=args.capacity,
+                                  scheme=args.scheme)
+                    with open(os.path.join(args.out, tag + ".json"),
+                              "w") as f:
+                        json.dump(res, f, indent=1)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nAll dry-runs compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every
+(architecture x input shape x mesh) combination — the dry-run contract.
+
+No device allocation happens here: params come from ``Model.abstract_params``
+(eval_shape), inputs are ShapeDtypeStructs, caches from
+``jax.eval_shape(model.init_cache, ...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (INPUT_SHAPES, ModelConfig, ShapeConfig,
+                                SubmodelConfig, get_config)
+from repro.models import build_model
+from repro.sharding import policy as pol
+from repro.sharding.ctx import ActivationPolicy, cp_rules, default_rules
+
+
+@dataclasses.dataclass
+class DryrunPlan:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    model: Any
+    scfg: SubmodelConfig
+    multi_pod: bool
+    mesh: Mesh
+    kind: str                      # train | prefill | decode
+    cp: bool                       # context-parallel decode (long_500k)
+    abstract_args: Tuple           # ShapeDtypeStructs for the step fn
+    in_shardings: Tuple
+    act_policy: ActivationPolicy
+    param_rules: dict
+
+
+# per-arch client capacity for the production fed round (memory-driven)
+TRAIN_CAPACITY = {
+    "deepseek_v3_671b": 0.25,
+    "mixtral_8x22b": 0.25,
+    "qwen3_32b": 0.5,
+    "qwen3_14b": 0.5,
+    "musicgen_large": 0.5,
+    "deepseek_7b": 0.5,
+    "phi_3_vision_4_2b": 0.5,
+    "tinyllama_1_1b": 0.5,
+    "mamba2_130m": 0.5,
+    "hymba_1_5b": 0.5,
+}
+
+K_LOCAL = 2  # local steps per round in the production fed round
+
+
+def data_axes(multi_pod):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def submodel_config(arch: str, multi_pod: bool) -> SubmodelConfig:
+    clients = 32 if multi_pod else 16
+    return SubmodelConfig(
+        scheme="rolling",
+        capacity=TRAIN_CAPACITY.get(arch, 0.5),
+        local_steps=K_LOCAL,
+        clients_per_round=clients,
+        client_lr=0.05,
+        align=128 if arch != "hymba_1_5b" else 1,   # 25 heads / 5 kv: unit align
+    )
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig, scfg: SubmodelConfig,
+               multi_pod: bool):
+    """Training batch ShapeDtypeStructs, layout [K, C, mb, ...]."""
+    C = scfg.clients_per_round
+    mb = max(shape.global_batch // C, 1)
+    S = shape.seq_len
+    P_ = cfg.vision_patches if cfg.vision_stub else 0
+    toks = (S - P_) if cfg.vision_stub else S
+    lead = (scfg.local_steps, C, mb)
+    batch = {}
+    if cfg.n_codebooks:
+        batch["tokens"] = jax.ShapeDtypeStruct(lead + (toks, cfg.n_codebooks),
+                                               jnp.int32)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct(lead + (toks,), jnp.int32)
+    if cfg.vision_stub:
+        batch["patches"] = jax.ShapeDtypeStruct(
+            lead + (P_, cfg.vision_d), jnp.bfloat16)
+    return batch
+
+
+def batch_shardings(batch, mesh, multi_pod):
+    d = data_axes(multi_pod)
+    d = d[0] if len(d) == 1 else d
+
+    def spec(x):
+        return NamedSharding(mesh, P(None, d, *([None] * (x.ndim - 2))))
+
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def serve_batch(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "prefill":
+        P_ = cfg.vision_patches if cfg.vision_stub else 0
+        out = {}
+        if cfg.n_codebooks:
+            out["tokens"] = jax.ShapeDtypeStruct((B, S, cfg.n_codebooks),
+                                                 jnp.int32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((B, S - P_), jnp.int32)
+        if cfg.vision_stub:
+            out["patches"] = jax.ShapeDtypeStruct((B, P_, cfg.vision_d),
+                                                  jnp.bfloat16)
+        return out
+    # decode: one token + cache of seq_len
+    if cfg.n_codebooks:
+        return {"tokens": jax.ShapeDtypeStruct((B, cfg.n_codebooks),
+                                               jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def cache_shardings(model, cache_abstract, mesh, multi_pod, cp):
+    """Cache specs: batch -> data; kv heads -> model; long ctx: seq -> data."""
+    d = data_axes(multi_pod)
+    d = d[0] if len(d) == 1 else d
+    msize = mesh.shape["model"]
+
+    def spec(path, x):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = x.ndim
+        ent = [None] * nd
+        # layouts: k/v [L,B,S,KV,hd]; c/kr [L,B,S,r]; h [L,B,nh,hd,N];
+        # conv_* [L,B,w,ch]
+        if key in ("k", "v"):
+            if cp:
+                ent[2] = d
+            else:
+                ent[1] = d
+            if x.shape[3] % msize == 0:
+                ent[3] = "model"
+        elif key in ("c", "kr"):
+            ent[2 if cp else 1] = d
+        elif key in ("h", "conv_x", "conv_B", "conv_C"):
+            if not cp:
+                ent[1] = d
+        return NamedSharding(mesh, P(*ent))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abstract)
+
+
+def make_plan(arch: str, shape_name: str, *, multi_pod: bool = False,
+              moe_path: str = "dropping", capacity: Optional[float] = None,
+              rules_override: Optional[dict] = None,
+              param_rules_override: Optional[dict] = None,
+              k_local: Optional[int] = None,
+              remat: bool = True,
+              scheme: str = "rolling") -> DryrunPlan:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # NOTE: lowered in f32.  XLA:CPU float-normalization rewrites bf16
+    # programs with full-buffer f32<->bf16 converts that destroy the
+    # in-place aliasing of loop-carried KV caches and double every loop
+    # carry — pure host-backend artifacts the TPU compile does not have.
+    # The roofline therefore lowers in f32 and reports bytes x 0.5 as the
+    # bf16 estimate (FLOP counts are dtype-independent).
+    model = build_model(cfg, moe_path=moe_path, remat=remat,
+                        param_dtype=jnp.float32)
+    scfg = submodel_config(arch, multi_pod)
+    if capacity is not None:
+        scfg = dataclasses.replace(scfg, capacity=capacity)
+    if scheme != "rolling":
+        scfg = dataclasses.replace(scfg, scheme=scheme)
+
+    cp = shape_name == "long_500k"
+    arules = cp_rules(multi_pod) if cp else default_rules(multi_pod)
+    # NOTE: seq='model' (megatron sequence parallelism) currently trips an
+    # XLA SPMD partitioner CHECK (grouped_sharding num_groups) in this
+    # environment — baseline keeps seq unsharded; see EXPERIMENTS.md §Perf.
+    if rules_override:
+        arules.update(rules_override)
+    act_policy = ActivationPolicy(mesh, arules)
+    prules = pol.default_param_rules(multi_pod, fsdp=True)
+    if param_rules_override:
+        for k, v in param_rules_override.items():
+            prules[k] = tuple(v) if isinstance(v, list) else v
+    if k_local:
+        scfg = dataclasses.replace(scfg, local_steps=k_local)
+
+    abstract = model.abstract_params()
+    axes = model.axes()
+    pshard = pol.param_shardings(abstract, axes, prules, mesh)
+
+    if shape.kind == "train":
+        batch = batch_spec(cfg, shape, scfg, multi_pod)
+        bshard = batch_shardings(batch, mesh, multi_pod)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        args = (abstract, batch, jax.ShapeDtypeStruct((), jnp.int32), rng)
+        inshard = (pshard, bshard,
+                   NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+        kind = "train"
+    elif shape.kind == "prefill":
+        batch = serve_batch(cfg, shape)
+        bshard = batch_shardings(batch, mesh, multi_pod)
+        args = (abstract, batch)
+        inshard = (pshard, bshard)
+        kind = "prefill"
+    else:
+        batch = serve_batch(cfg, shape)
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     jnp.float32))
+        cshard = cache_shardings(model, cache, mesh, multi_pod, cp)
+        d = data_axes(multi_pod)
+        d = d[0] if len(d) == 1 else d
+        tshard = jax.tree_util.tree_map(
+            lambda x: NamedSharding(
+                mesh, P(None if cp else d, *([None] * (x.ndim - 1)))), batch)
+        args = (abstract, batch, cache, jax.ShapeDtypeStruct((), jnp.int32))
+        inshard = (pshard, tshard, cshard, NamedSharding(mesh, P()))
+        kind = "decode"
+
+    return DryrunPlan(arch=arch, shape=shape, cfg=cfg, model=model,
+                      scfg=scfg, multi_pod=multi_pod, mesh=mesh, kind=kind,
+                      cp=cp, abstract_args=args, in_shardings=inshard,
+                      act_policy=act_policy, param_rules=prules)

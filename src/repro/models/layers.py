@@ -1,0 +1,162 @@
+"""Shared layer primitives + axis-tagged parameter construction.
+
+Every parameter is created through :class:`ParamBuilder` with a tuple of
+*semantic axis names* (one per array dim).  The resulting axis-tag tree is the
+single source of truth consumed by
+
+  * ``repro.core.extract``  — sub-model window extraction / scatter,
+  * ``repro.sharding.policy`` — mesh PartitionSpecs,
+  * ``repro.core.masking``  — dense structured masks.
+
+Axis names used across the zoo::
+
+  layers vocab d_model d_ff heads kv_heads head_dim experts moe_d_ff
+  ssm_heads ssm_head_dim ssm_state conv_w mla_q_rank mla_kv_rank rope_dim
+  v_head_dim codebooks vision_d none
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Axis-tagged parameter building
+# ---------------------------------------------------------------------------
+
+
+class ParamBuilder:
+    """Collects a params pytree and a parallel axis-tag pytree."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: Dict = {}
+        self.axes: Dict = {}
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _put(self, path: str, value, axes: Tuple[str, ...]):
+        assert value.ndim == len(axes), (path, value.shape, axes)
+        parts = path.split("/")
+        p, a = self.params, self.axes
+        for q in parts[:-1]:
+            p = p.setdefault(q, {})
+            a = a.setdefault(q, {})
+        assert parts[-1] not in p, f"duplicate param {path}"
+        p[parts[-1]] = value
+        a[parts[-1]] = axes
+
+    def dense(self, path, shape, axes, scale=None, layers=0):
+        """Normal(0, scale) weight.  ``layers`` prepends a stacked-layer dim."""
+        if scale is None:
+            fan_in = int(np.prod([s for s, ax in zip(shape, axes)
+                                  if ax not in ("heads", "kv_heads")][:-1]) or shape[0])
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        if layers:
+            shape = (layers,) + tuple(shape)
+            axes = ("layers",) + tuple(axes)
+        w = jax.random.normal(self._next(), shape, self.dtype) * scale
+        self._put(path, w, axes)
+
+    def const(self, path, shape, axes, value=0.0, layers=0):
+        if layers:
+            shape = (layers,) + tuple(shape)
+            axes = ("layers",) + tuple(axes)
+        self._put(path, jnp.full(shape, value, self.dtype), axes)
+
+    def custom(self, path, value, axes, layers_dim=False):
+        axes = (("layers",) + tuple(axes)) if layers_dim else tuple(axes)
+        self._put(path, value.astype(self.dtype), axes)
+
+
+def tree_paths(tree, prefix=""):
+    for k, v in tree.items():
+        p = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            yield from tree_paths(v, p)
+        else:
+            yield p, v
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / positions
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                 # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d_model):
+    """[..., S] int -> [..., S, D] float."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(b: ParamBuilder, prefix, d_model, d_ff, layers=0,
+               ff_axis="d_ff"):
+    b.dense(f"{prefix}/w_gate", (d_model, d_ff), ("d_model", ff_axis),
+            layers=layers)
+    b.dense(f"{prefix}/w_up", (d_model, d_ff), ("d_model", ff_axis),
+            layers=layers)
+    b.dense(f"{prefix}/w_down", (d_ff, d_model), (ff_axis, "d_model"),
+            layers=layers)
+
+
+def mlp_apply(p, x, act="silu"):
+    g = act_fn(act)(x @ p["w_gate"])
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy (vocab possibly sharded on `model`)
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels, mask=None):
+    """logits [..., V] f32-upcast stable xent; labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - picked
+    if mask is not None:
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)

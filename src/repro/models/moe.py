@@ -1,0 +1,122 @@
+"""Mixture-of-Experts: top-k routing with sort-based capacity dispatch.
+
+Two compute paths:
+
+* ``dense``    — every expert processes every token, outputs weighted by the
+                 router.  Exact; used for reduced/smoke configs and as the
+                 test oracle.
+* ``dropping`` — production path: tokens are routed via ``lax.sort`` into
+                 per-expert capacity buckets ([E, C, D] batched matmuls, MXU
+                 friendly, expert dim shardable), tokens over capacity are
+                 dropped (standard Switch-style).  FLOPs ≈ active-expert FLOPs
+                 x capacity_factor — this is what the roofline sees, not a
+                 dense one-hot einsum.
+
+Routing styles: ``softmax`` (Mixtral: softmax over top-k logits) and
+``sigmoid`` (DeepSeek-V3: sigmoid scores, top-k, weights normalized over the
+selected k).  A Switch-style load-balance auxiliary loss is returned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder, act_fn
+from repro.sharding.ctx import constrain
+
+
+def moe_params(b: ParamBuilder, prefix, cfg, layers=0):
+    mo, D = cfg.moe, cfg.d_model
+    E, F = mo.n_experts, mo.d_ff
+    b.dense(f"{prefix}/router", (D, E), ("d_model", "experts"), layers=layers)
+    for w, sh, ax in (("w_gate", (E, D, F), ("experts", "d_model", "moe_d_ff")),
+                      ("w_up", (E, D, F), ("experts", "d_model", "moe_d_ff")),
+                      ("w_down", (E, F, D), ("experts", "moe_d_ff", "d_model"))):
+        b.dense(f"{prefix}/{w}", sh, ax, layers=layers)
+    if mo.n_shared:
+        Fs = mo.n_shared * F
+        b.dense(f"{prefix}/shared/w_gate", (D, Fs), ("d_model", "moe_d_ff"),
+                layers=layers)
+        b.dense(f"{prefix}/shared/w_up", (D, Fs), ("d_model", "moe_d_ff"),
+                layers=layers)
+        b.dense(f"{prefix}/shared/w_down", (Fs, D), ("moe_d_ff", "d_model"),
+                layers=layers)
+
+
+def _route(p, x, cfg):
+    """x [T,D] -> (weights [T,k], idx [T,k], aux_loss)."""
+    mo = cfg.moe
+    E = p["router"].shape[-1]          # may be a sub-model window of experts
+    k = min(mo.top_k, E)
+    logits = (x @ p["router"]).astype(jnp.float32)     # [T,E]
+    if mo.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    else:
+        w, idx = jax.lax.top_k(logits, k)
+        w = jax.nn.softmax(w, axis=-1)
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], E), axis=0)
+    aux = E * jnp.sum(frac * probs.mean(0))
+    return w.astype(x.dtype), idx, aux
+
+
+def _expert_ffn(wg, wu, wd, x, act):
+    g = act_fn(act)(jnp.einsum("ecd,edf->ecf", x, wg))
+    u = jnp.einsum("ecd,edf->ecf", x, wu)
+    return jnp.einsum("ecf,efd->ecd", g * u, wd)
+
+
+def moe_apply(p, x, cfg, path="dropping"):
+    """x [B,S,D] -> (out [B,S,D], aux_loss scalar)."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    w, idx, aux = _route(p, xt, cfg)
+    mo = cfg.moe
+    E = p["router"].shape[-1]
+    k = idx.shape[-1]
+    T = xt.shape[0]
+
+    if path == "dense":
+        g = act_fn(cfg.act)(jnp.einsum("td,edf->tef", xt, p["w_gate"]))
+        u = jnp.einsum("td,edf->tef", xt, p["w_up"])
+        y_all = jnp.einsum("tef,efd->ted", g * u, p["w_down"])  # [T,E,D]
+        gate = jnp.zeros((T, E), xt.dtype)
+        gate = jax.vmap(lambda gt, it, wt: gt.at[it].add(wt))(gate, idx, w)
+        out = jnp.einsum("ted,te->td", y_all, gate)
+    else:
+        C = max(int(T * k / E * mo.capacity_factor), 1)
+        C = min(C, T)
+        # flatten (token, expert-choice) pairs and sort by expert id
+        flat_e = idx.reshape(-1)                       # [T*k]
+        flat_t = jnp.repeat(jnp.arange(T), k)
+        flat_w = w.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        # rank within expert = position - start offset of that expert
+        counts = jnp.bincount(se, length=E)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(T * k) - starts[se]
+        keep = rank < C
+        slot = se * C + jnp.where(keep, rank, 0)       # [T*k] in [0, E*C)
+        # dispatch: gather token rows into [E*C, D]
+        xin = jnp.zeros((E * C, D), xt.dtype).at[slot].set(
+            jnp.where(keep[:, None], xt[st], 0.0))
+        # pin dispatch/combine to expert-parallel layout so the partitioner
+        # routes tokens with one all-to-all-ish exchange instead of
+        # re-gathering the token matrix per expert shard
+        xin = constrain(xin.reshape(E, C, D), "experts", None, None)
+        y = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], xin, cfg.act)
+        y = constrain(y, "experts", None, None)
+        # combine: weighted scatter-add back to tokens
+        y_flat = y.reshape(E * C, D)[slot]             # [T*k, D]
+        contrib = jnp.where(keep[:, None], y_flat * sw[:, None], 0.0)
+        out = jnp.zeros((T, D), y_flat.dtype).at[st].add(contrib)
+
+    if mo.n_shared:
+        sp = p["shared"]
+        g = act_fn(cfg.act)(xt @ sp["w_gate"])
+        out = out + (g * (xt @ sp["w_up"])) @ sp["w_down"]
+    return out.reshape(B, S, D).astype(x.dtype), aux * mo.aux_loss_weight

@@ -1,0 +1,98 @@
+"""Pre-activated ResNet (paper §5.1) — width-scalable, static BN + scaler.
+
+Faithful to the paper's experimental setup: batch-norm is *static* (batch
+statistics every forward, no running buffers — the HeteroFL sBN trick that
+makes heterogeneous-width aggregation sound) and every convolution is
+followed by a scalar module that rescales activations by ``1/capacity`` so
+sub-model activations match full-model magnitude.
+
+All channel dims are tagged ``channels`` so the generic sub-model window
+machinery (``repro.core.extract``) applies to it exactly as to the LLM zoo:
+HeteroFL static windows / FedRolex rolling windows over channels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder, softmax_xent
+
+
+def _conv_p(b, path, kh, kw, cin, cout):
+    b.dense(path, (kh, kw, cin, cout),
+            ("conv_kh", "conv_kw", "channels", "channels"),
+            scale=(2.0 / (kh * kw * cin)) ** 0.5)
+
+
+def _bn_p(b, path, c):
+    b.const(f"{path}/scale", (c,), ("channels",), 1.0)
+    b.const(f"{path}/bias", (c,), ("channels",), 0.0)
+
+
+def build_resnet_params(cfg, key):
+    b = ParamBuilder(key)
+    w = cfg.width
+    _conv_p(b, "stem", 3, 3, cfg.in_channels, w)
+    cin = w
+    for si, nblocks in enumerate(cfg.stages):
+        cout = w * (2 ** si)
+        for bi in range(nblocks):
+            pre = f"stage{si}/block{bi}"
+            _bn_p(b, f"{pre}/bn1", cin)
+            _conv_p(b, f"{pre}/conv1", 3, 3, cin, cout)
+            _bn_p(b, f"{pre}/bn2", cout)
+            _conv_p(b, f"{pre}/conv2", 3, 3, cout, cout)
+            if cin != cout or bi == 0 and si > 0:
+                _conv_p(b, f"{pre}/proj", 1, 1, cin, cout)
+            cin = cout
+    _bn_p(b, "final_bn", cin)
+    b.dense("fc/w", (cin, cfg.n_classes), ("channels", "classes"))
+    b.const("fc/b", (cfg.n_classes,), ("classes",), 0.0)
+    return b.params, b.axes
+
+
+def _static_bn(x, p, eps=1e-5):
+    mean = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _conv(x, w, stride=1, scaler=1.0):
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out * scaler
+
+
+def resnet_forward(params, cfg, images, scaler=1.0):
+    """images [B,H,W,C] -> logits [B,classes].
+
+    ``scaler`` = 1/capacity when running a width-scaled sub-model (the
+    paper's scalar-module compensation).
+    """
+    h = _conv(images, params["stem"], 1, scaler)
+    si = 0
+    for si, nblocks in enumerate(cfg.stages):
+        for bi in range(nblocks):
+            p = params[f"stage{si}"][f"block{bi}"]
+            stride = 2 if (bi == 0 and si > 0) else 1
+            z = jax.nn.relu(_static_bn(h, p["bn1"]))
+            out = _conv(z, p["conv1"], stride, scaler)
+            out = jax.nn.relu(_static_bn(out, p["bn2"]))
+            out = _conv(out, p["conv2"], 1, scaler)
+            skip = _conv(z, p["proj"], stride, scaler) if "proj" in p else h
+            h = skip + out
+    h = jax.nn.relu(_static_bn(h, params["final_bn"]))
+    h = h.mean(axis=(1, 2))
+    return h @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def resnet_loss(params, cfg, batch, scaler=None):
+    """scaler: explicit, or per-client via batch['scaler'] (1/capacity)."""
+    if scaler is None:
+        scaler = batch.get("scaler", 1.0)
+    logits = resnet_forward(params, cfg, batch["images"], scaler)
+    loss = softmax_xent(logits, batch["labels"])
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(
+        jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

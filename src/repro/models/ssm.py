@@ -1,0 +1,186 @@
+"""Mamba-2 (SSD, state-space duality) mixer — TPU-native chunked form.
+
+Training/prefill use the *chunked SSD block decomposition* [arXiv:2405.21060]:
+intra-chunk quadratic (attention-like, MXU matmuls) + inter-chunk state
+recurrence via ``lax.scan`` over chunks — O(S) with matmul-dominated compute,
+which is the right adaptation of the selective-scan to the MXU (no
+warp-shuffle scan tricks needed on TPU).
+
+Decode carries per-layer recurrent state [B, nh, hd, N] + depthwise-conv tail
+buffers; one step is a pure elementwise recurrence (O(1) in S).
+
+Projections are kept *split* (w_z/w_x/w_B/w_C/w_dt instead of one fused
+in_proj) so each carries clean semantic axis tags for sub-model windowing —
+``ssm_heads`` is the windowed unit; B/C (ngroups=1, shared across heads) and
+d_state stay full.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder, rms_norm
+
+
+def ssm_params(b: ParamBuilder, prefix, cfg, layers=0):
+    s, D = cfg.ssm, cfg.d_model
+    nh = s.n_heads or (s.expand * D) // s.head_dim
+    hd, N, cw = s.head_dim, s.d_state, s.conv_width
+    b.dense(f"{prefix}/w_z", (D, nh, hd), ("d_model", "ssm_heads",
+                                           "ssm_head_dim"), layers=layers)
+    b.dense(f"{prefix}/w_x", (D, nh, hd), ("d_model", "ssm_heads",
+                                           "ssm_head_dim"), layers=layers)
+    b.dense(f"{prefix}/w_B", (D, N), ("d_model", "ssm_state"), layers=layers)
+    b.dense(f"{prefix}/w_C", (D, N), ("d_model", "ssm_state"), layers=layers)
+    b.dense(f"{prefix}/w_dt", (D, nh), ("d_model", "ssm_heads"), layers=layers)
+    b.const(f"{prefix}/dt_bias", (nh,), ("ssm_heads",), 0.0, layers=layers)
+    b.const(f"{prefix}/A_log", (nh,), ("ssm_heads",), 0.0, layers=layers)
+    b.const(f"{prefix}/D_skip", (nh,), ("ssm_heads",), 1.0, layers=layers)
+    b.dense(f"{prefix}/conv_x", (cw, nh, hd), ("conv_w", "ssm_heads",
+                                               "ssm_head_dim"), layers=layers)
+    b.dense(f"{prefix}/conv_B", (cw, N), ("conv_w", "ssm_state"),
+            layers=layers)
+    b.dense(f"{prefix}/conv_C", (cw, N), ("conv_w", "ssm_state"),
+            layers=layers)
+    b.const(f"{prefix}/y_norm", (nh, hd), ("ssm_heads", "ssm_head_dim"), 1.0,
+            layers=layers)
+    b.dense(f"{prefix}/w_out", (nh, hd, D), ("ssm_heads", "ssm_head_dim",
+                                             "d_model"), layers=layers)
+
+
+def _causal_conv(x, w):
+    """x [B,S,ch]; w [cw,ch] depthwise causal conv."""
+    cw, ch = w.shape
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :], window_strides=(1,), padding=[(cw - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=ch)
+    return out
+
+
+def _projections(p, x):
+    z = jnp.einsum("bsd,dhe->bshe", x, p["w_z"])
+    xr = jnp.einsum("bsd,dhe->bshe", x, p["w_x"])
+    Br = x @ p["w_B"]
+    Cr = x @ p["w_C"]
+    dt_raw = x @ p["w_dt"] + p["dt_bias"]
+    return z, xr, Br, Cr, dt_raw
+
+
+def ssd_chunked(xr, dt, A, Br, Cr, chunk):
+    """Chunked SSD.  xr [B,S,nh,hd]; dt [B,S,nh]; A [nh]; Br/Cr [B,S,N].
+
+    Returns y [B,S,nh,hd] and final state [B,nh,hd,N].
+    """
+    B, S, nh, hd = xr.shape
+    N = Br.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    xs = xr.reshape(B, nc, Q, nh, hd)
+    dts = dt.reshape(B, nc, Q, nh)
+    Bs = Br.reshape(B, nc, Q, N)
+    Cs = Cr.reshape(B, nc, Q, N)
+    dA = dts * A                                         # [B,nc,Q,nh] (<=0)
+    L = jnp.cumsum(dA, axis=2)                           # inclusive
+    # ---- intra-chunk (quadratic within chunk) ----
+    CB = jnp.einsum("bcqn,bctn->bcqt", Cs, Bs,
+                    preferred_element_type=jnp.float32)  # [B,nc,Q,Q]
+    # decay[b,c,h,q,t] = exp(L[q,h]-L[t,h]) for q>=t
+    Lh = L.transpose(0, 1, 3, 2)                         # [B,nc,nh,Q]
+    diff = Lh[..., :, None] - Lh[..., None, :]           # [B,nc,nh,Q,Q]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal, jnp.exp(diff), 0.0)
+    M = CB[:, :, None] * decay * dts.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqt,bcthp->bcqhp", M.astype(xs.dtype), xs,
+                         preferred_element_type=jnp.float32)
+    # ---- chunk states ----
+    Llast = Lh[..., -1:]                                 # [B,nc,nh,1]
+    sdecay = jnp.exp(Llast - Lh) * dts.transpose(0, 1, 3, 2)  # [B,nc,nh,Q]
+    states = jnp.einsum("bcthp,bctn,bcht->bchpn", xs, Bs,
+                        sdecay.astype(xs.dtype),
+                        preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk recurrence ----
+    def step(h, inp):
+        st, dtot = inp                                   # [B,nh,hd,N],[B,nh]
+        h_new = h * jnp.exp(dtot)[:, :, None, None] + st
+        return h_new, h                                  # emit state at entry
+
+    dtot = dA.sum(2)                                     # [B,nc,nh]
+    h0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    hT, h_entry = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   dtot.transpose(1, 0, 2)))
+    h_entry = h_entry.transpose(1, 0, 2, 3, 4)           # [B,nc,nh,hd,N]
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cs, h_entry.astype(Cs.dtype),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(L)[..., None].astype(y_inter.dtype)
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y.astype(xr.dtype), hT
+
+
+def ssm_train(p, x, cfg, return_state=False):
+    """x [B,S,D] -> [B,S,D] (optionally + decode cache)."""
+    s = cfg.ssm
+    z, xr, Br, Cr, dt_raw = _projections(p, x)
+    B, S, nh, hd = xr.shape
+    xr = jax.nn.silu(_causal_conv(xr.reshape(B, S, nh * hd),
+                                  p["conv_x"].reshape(s.conv_width, nh * hd))
+                     ).reshape(B, S, nh, hd)
+    Brc = jax.nn.silu(_causal_conv(Br, p["conv_B"]))
+    Crc = jax.nn.silu(_causal_conv(Cr, p["conv_C"]))
+    dt = jax.nn.softplus(dt_raw)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, hT = ssd_chunked(xr, dt, A, Brc, Crc, s.chunk)
+    y = y + p["D_skip"][:, None] * xr
+    y = rms_norm(y * jax.nn.silu(z), p["y_norm"], cfg.norm_eps)
+    out = jnp.einsum("bshe,hed->bsd", y, p["w_out"])
+    if not return_state:
+        return out
+    cw = s.conv_width
+    cache = {
+        "h": hT,                                          # [B,nh,hd,N]
+        "conv_x": xr_raw_tail(z, x, p, nh, hd, cw),
+        "conv_B": Br[:, -(cw - 1):],
+        "conv_C": Cr[:, -(cw - 1):],
+    }
+    return out, cache
+
+
+def xr_raw_tail(z, x, p, nh, hd, cw):
+    xr_raw = jnp.einsum("bsd,dhe->bshe", x, p["w_x"])
+    return xr_raw[:, -(cw - 1):].reshape(x.shape[0], cw - 1, nh * hd)
+
+
+def ssm_decode(p, x, cfg, cache, pos):
+    """x [B,1,D]; cache {h, conv_x, conv_B, conv_C}."""
+    s = cfg.ssm
+    del pos
+    z, xr, Br, Cr, dt_raw = _projections(p, x)           # seq dim = 1
+    B = x.shape[0]
+    nh, hd = xr.shape[2], xr.shape[3]
+    cw = s.conv_width
+
+    def conv_step(buf, new, w):
+        # buf [B,cw-1,ch]; new [B,1,ch]; w [cw,ch]
+        win = jnp.concatenate([buf, new], axis=1)        # [B,cw,ch]
+        out = jnp.einsum("bwc,wc->bc", win, w)
+        return out, win[:, 1:]
+
+    xr_f, conv_x = conv_step(cache["conv_x"], xr.reshape(B, 1, nh * hd),
+                             p["conv_x"].reshape(cw, nh * hd))
+    Br_f, conv_B = conv_step(cache["conv_B"], Br, p["conv_B"])
+    Cr_f, conv_C = conv_step(cache["conv_C"], Cr, p["conv_C"])
+    xr_f = jax.nn.silu(xr_f).reshape(B, nh, hd)
+    Br_f = jax.nn.silu(Br_f)
+    Cr_f = jax.nn.silu(Cr_f)
+    dt = jax.nn.softplus(dt_raw[:, 0])                   # [B,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                              # [B,nh]
+    h = cache["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xr_f.astype(jnp.float32), Br_f.astype(jnp.float32),
+        dt)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cr_f.astype(jnp.float32))
+    y = y.astype(x.dtype) + p["D_skip"][:, None] * xr_f
+    y = rms_norm(y[:, None] * jax.nn.silu(z), p["y_norm"], cfg.norm_eps)
+    out = jnp.einsum("bshe,hed->bsd", y, p["w_out"])
+    return out, {"h": h, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}

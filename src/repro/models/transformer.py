@@ -1,0 +1,415 @@
+"""Model assembly: one composable decoder framework for all 10 assigned
+architectures (dense / MoE / SSM / hybrid / audio / VLM).
+
+* Parameters are stacked over layers (leading ``layers`` dim) and the stack is
+  executed with ``lax.scan`` — small HLO, fast multi-pod compiles, remat-able.
+* Each leaf carries semantic axis tags (see ``repro.models.layers``), which
+  drive sub-model windowing, masking, and sharding.
+* Three entry points per model: ``loss``/``forward`` (train), ``prefill``
+  (build KV/SSM caches from a prompt), ``decode_step`` (one token).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (ParamBuilder, mlp_apply, mlp_params,
+                                 rms_norm, sinusoidal_positions, softmax_xent)
+from repro.sharding.ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _layer_kind(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Stack names in execution order."""
+    if cfg.family == "ssm":
+        return ("ssm_layers",)
+    if cfg.moe is not None and cfg.n_dense_layers:
+        return ("dense_layers", "moe_layers")
+    if cfg.moe is not None:
+        return ("moe_layers",)
+    return ("layers",)
+
+
+def _block_params(b: ParamBuilder, stack: str, cfg: ModelConfig, n: int):
+    pre = stack
+    b.const(f"{pre}/ln1", (cfg.d_model,), ("d_model",), 1.0, layers=n)
+    if cfg.family == "ssm":
+        ssm_mod.ssm_params(b, f"{pre}/ssm", cfg, layers=n)
+        return
+    if cfg.mla is not None:
+        attn.mla_params(b, f"{pre}/attn", cfg, layers=n)
+    else:
+        attn.attn_params(b, f"{pre}/attn", cfg, layers=n)
+    if cfg.hybrid:
+        ssm_mod.ssm_params(b, f"{pre}/ssm", cfg, layers=n)
+        b.const(f"{pre}/fuse_a", (cfg.d_model,), ("d_model",), 1.0, layers=n)
+        b.const(f"{pre}/fuse_s", (cfg.d_model,), ("d_model",), 1.0, layers=n)
+    b.const(f"{pre}/ln2", (cfg.d_model,), ("d_model",), 1.0, layers=n)
+    if stack == "moe_layers":
+        moe_mod.moe_params(b, f"{pre}/moe", cfg, layers=n)
+    else:
+        mlp_params(b, f"{pre}/mlp", cfg.d_model, cfg.d_ff, layers=n)
+
+
+def build_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Tuple[Dict, Dict]:
+    b = ParamBuilder(key, dtype=dtype)
+    D, V = cfg.d_model, cfg.vocab
+    if cfg.n_codebooks:
+        b.dense("embed", (cfg.n_codebooks, V, D), ("codebooks", "vocab",
+                                                   "d_model"), scale=0.02)
+        b.dense("head", (cfg.n_codebooks, D, V), ("codebooks", "d_model",
+                                                  "vocab"))
+    else:
+        b.dense("embed", (V, D), ("vocab", "d_model"), scale=0.02)
+        if not cfg.tie_embeddings:
+            b.dense("head", (D, V), ("d_model", "vocab"))
+    if cfg.vision_stub:
+        b.dense("vision_proj/w1", (cfg.vision_d, D), ("vision_d", "d_model"))
+        b.dense("vision_proj/w2", (D, D), ("d_model", "d_model"))
+    stacks = _layer_kind(cfg)
+    for s in stacks:
+        if s == "dense_layers":
+            n = cfg.n_dense_layers
+        elif s == "moe_layers":
+            n = cfg.n_layers - cfg.n_dense_layers
+        else:
+            n = cfg.n_layers
+        _block_params(b, s, cfg, n)
+    b.const("final_norm", (D,), ("d_model",), 1.0)
+    if cfg.mtp:
+        b.const("mtp/ln1", (D,), ("d_model",), 1.0)
+        attn.attn_params(b, "mtp/attn", cfg, layers=0) if cfg.mla is None \
+            else attn.mla_params(b, "mtp/attn", cfg, layers=0)
+        b.const("mtp/ln2", (D,), ("d_model",), 1.0)
+        mlp_params(b, "mtp/mlp", D, cfg.d_ff, layers=0)
+        b.const("mtp/final", (D,), ("d_model",), 1.0)
+    return b.params, b.axes
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _attn_any(p, x, cfg, positions, mode, cache=None, pos=None, mesh=None,
+              cp=False, valid=None, rope_pos=None):
+    if cfg.mla is not None:
+        if mode == "train":
+            return attn.mla_train(p, x, cfg, positions), None
+        if mode == "prefill":
+            return attn.mla_prefill(p, x, cfg, positions)
+        return attn.mla_decode(p, x, cfg, cache, pos, mesh=mesh, cp=cp,
+                               valid_override=valid, rope_pos=rope_pos)
+    if mode == "train":
+        return attn.gqa_train(p, x, cfg, positions), None
+    if mode == "prefill":
+        S = x.shape[1]
+        clen = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        return attn.gqa_prefill(p, x, cfg, positions, clen)
+    return attn.gqa_decode(p, x, cfg, cache, pos, mesh=mesh, cp=cp,
+                           valid_override=valid, rope_pos=rope_pos)
+
+
+def block_apply(p, h, cfg, stack, positions, mode="train", cache=None,
+                pos=None, mesh=None, cp=False, moe_path="dropping",
+                valid=None, rope_pos=None):
+    """One layer.  Returns (h, aux_loss, new_cache_layer)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        if mode == "train":
+            out = ssm_mod.ssm_train(p["ssm"], x, cfg)
+        elif mode == "prefill":
+            out, c = ssm_mod.ssm_train(p["ssm"], x, cfg, return_state=True)
+            new_cache.update(c)
+        else:
+            out, c = ssm_mod.ssm_decode(p["ssm"], x, cfg, cache, pos)
+            new_cache.update(c)
+        return h + out, aux, new_cache
+    a, acache = _attn_any(p["attn"], x, cfg, positions, mode, cache, pos,
+                          mesh, cp, valid, rope_pos)
+    if acache:
+        new_cache.update(acache)
+    if cfg.hybrid:
+        if mode == "train":
+            s_out = ssm_mod.ssm_train(p["ssm"], x, cfg)
+        elif mode == "prefill":
+            s_out, c = ssm_mod.ssm_train(p["ssm"], x, cfg, return_state=True)
+            new_cache.update(c)
+        else:
+            scache = {k: cache[k] for k in ("h", "conv_x", "conv_B", "conv_C")}
+            s_out, c = ssm_mod.ssm_decode(p["ssm"], x, cfg, scache, pos)
+            new_cache.update(c)
+        a = 0.5 * (rms_norm(a, p["fuse_a"], cfg.norm_eps)
+                   + rms_norm(s_out, p["fuse_s"], cfg.norm_eps))
+    h = h + constrain(a, "batch", "seq", "d_model")
+    x2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if stack == "moe_layers":
+        out, aux = moe_mod.moe_apply(p["moe"], x2, cfg, path=moe_path)
+    else:
+        out = mlp_apply(p["mlp"], x2, cfg.act)
+    h = h + constrain(out, "batch", "seq", "d_model")
+    return h, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    moe_path: str = "dropping"
+    remat: bool = True
+    param_dtype: Any = jnp.float32
+    _axes_cache: Any = None
+
+    # -- params ------------------------------------------------------------
+    def init(self, key):
+        params, _ = build_params(self.cfg, key, self.param_dtype)
+        return params
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def axes(self):
+        if self._axes_cache is None:
+            box = {}
+
+            def f(key):
+                p, a = build_params(self.cfg, key)
+                box["axes"] = a
+                return p
+
+            jax.eval_shape(f, jax.random.PRNGKey(0))
+            object.__setattr__(self, "_axes_cache", box["axes"])
+        return self._axes_cache
+
+    # -- embedding / head ----------------------------------------------------
+    def _embed(self, params, tokens, extra):
+        cfg = self.cfg
+        if cfg.n_codebooks:
+            # tokens [B,S,CB]
+            h = 0.0
+            for cb in range(cfg.n_codebooks):
+                h = h + params["embed"][cb][tokens[..., cb]]
+        else:
+            h = params["embed"][tokens]
+        if cfg.pos_embed == "sinusoidal":
+            B, S = tokens.shape[:2]
+            pos = jnp.arange(S)[None]
+            h = h + sinusoidal_positions(pos, h.shape[-1]).astype(h.dtype)
+        if cfg.vision_stub and extra is not None and "patches" in extra:
+            vp = extra["patches"] @ params["vision_proj"]["w1"]
+            vp = jax.nn.gelu(vp) @ params["vision_proj"]["w2"]
+            h = jnp.concatenate([vp.astype(h.dtype), h], axis=1)
+        return constrain(h, "batch", "seq", "d_model")
+
+    def _head(self, params, h):
+        cfg = self.cfg
+        if cfg.n_codebooks:
+            logits = jnp.einsum("bsd,cdv->bscv", h, params["head"])
+        elif cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        else:
+            logits = h @ params["head"]
+        return constrain(logits, "batch", "seq", None, "vocab") \
+            if cfg.n_codebooks else constrain(logits, "batch", "seq", "vocab")
+
+    # -- stacks ---------------------------------------------------------------
+    def _run_stacks(self, params, h, positions, mode, caches=None, pos=None,
+                    mesh=None, cp=False, valid=None, rope_pos=None):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for stack in _layer_kind(cfg):
+            stack_params = params[stack]
+            cache_stack = caches.get(stack) if caches else None
+
+            if cache_stack is None:
+                def body(carry, lp, stack=stack):
+                    h, aux = carry
+                    h, a, nc = block_apply(lp, h, cfg, stack, positions,
+                                           mode, None, pos, mesh, cp,
+                                           self.moe_path, valid, rope_pos)
+                    return (h, aux + a), nc
+                xs = stack_params
+            else:
+                def body(carry, xs_, stack=stack):
+                    h, aux = carry
+                    lp, lc = xs_
+                    h, a, nc = block_apply(lp, h, cfg, stack, positions,
+                                           mode, lc, pos, mesh, cp,
+                                           self.moe_path, valid, rope_pos)
+                    return (h, aux + a), nc
+                xs = (stack_params, cache_stack)
+
+            fn = jax.checkpoint(body) if (self.remat and mode == "train") \
+                else body
+            (h, aux_total), ys = jax.lax.scan(fn, (h, aux_total), xs)
+            if mode in ("prefill", "decode") and ys:
+                new_caches[stack] = ys
+        return h, aux_total, new_caches
+
+    # -- entry points ---------------------------------------------------------
+    def forward(self, params, tokens, extra=None):
+        cfg = self.cfg
+        h = self._embed(params, tokens, extra)
+        B, S = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, aux, _ = self._run_stacks(params, h, positions, "train")
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return self._head(params, h), aux, h
+
+    def loss(self, params, batch):
+        """batch: tokens [B,S] (or [B,S,CB]); optional patches, mask."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        logits, aux, h = self.forward(params, tokens, batch)
+        P = cfg.vision_patches if (cfg.vision_stub and "patches" in batch) \
+            else 0
+        if P:
+            logits = logits[:, P:]
+        if cfg.n_codebooks:
+            lm = softmax_xent(logits[:, :-1].reshape(-1, cfg.vocab),
+                              tokens[:, 1:].reshape(-1))
+        else:
+            lm = softmax_xent(logits[:, :-1], tokens[:, 1:])
+        total = lm + aux
+        metrics = {"lm_loss": lm, "aux_loss": aux}
+        if cfg.mtp and not cfg.n_codebooks:
+            hp = h[:, P:] if P else h
+            B, S = tokens.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(hp.shape[1]),
+                                         (B, hp.shape[1]))
+            hmtp, _, _ = block_apply(params["mtp"], hp, cfg, "layers",
+                                     positions, "train",
+                                     moe_path=self.moe_path)
+            hmtp = rms_norm(hmtp, params["mtp"]["final"], cfg.norm_eps)
+            mtp_logits = self._head(params, hmtp)
+            mtp = softmax_xent(mtp_logits[:, :-2], tokens[:, 2:])
+            total = total + 0.3 * mtp
+            metrics["mtp_loss"] = mtp
+        metrics["loss"] = total
+        return total, metrics
+
+    def prefill(self, params, tokens, extra=None, max_len=None,
+                pos_offset=0, return_all_logits=False):
+        """max_len: total cache capacity for subsequent decode_steps.
+        pos_offset: absolute position of the first token (continuous
+        batching timelines).  return_all_logits: per-position logits for
+        ragged-prompt cohorts."""
+        cfg = self.cfg
+        h = self._embed(params, tokens, extra)
+        B, S = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(pos_offset + jnp.arange(S), (B, S))
+        h, _, caches = self._run_stacks(params, h, positions, "prefill")
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, h if return_all_logits else h[:, -1:])
+        if max_len is not None:
+            caches = self._pad_caches(caches, max_len)
+        return (logits if return_all_logits else logits[:, 0]), caches
+
+    def _pad_caches(self, caches, max_len):
+        cfg = self.cfg
+        kv_target = min(max_len, cfg.sliding_window) if cfg.sliding_window \
+            else max_len
+
+        def pad(path, x):
+            key = path[-1].key if hasattr(path[-1], "key") else path[-1]
+            if key in ("k", "v", "c", "kr"):
+                tgt = kv_target if key in ("k", "v") else max_len
+                cur = x.shape[2]
+                if cur < tgt:
+                    padw = [(0, 0)] * x.ndim
+                    padw[2] = (0, tgt - cur)
+                    return jnp.pad(x, padw)
+            return x
+
+        return jax.tree_util.tree_map_with_path(pad, caches)
+
+    def decode_step(self, params, tokens, caches, pos, mesh=None, cp=False,
+                    valid=None, rope_pos=None):
+        """tokens [B] (or [B,CB]); caches from prefill/init_cache; pos
+        scalar; valid [B, cache_len] optional per-slot mask (continuous
+        batching)."""
+        cfg = self.cfg
+        tok = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
+        h = self._embed_decode(params, tok, pos)
+        positions = None
+        h, _, caches = self._run_stacks(params, h, positions, "decode",
+                                        caches, pos, mesh, cp, valid,
+                                        rope_pos)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, h)
+        return logits[:, 0], caches
+
+    def _embed_decode(self, params, tok, pos):
+        cfg = self.cfg
+        if cfg.n_codebooks:
+            h = 0.0
+            for cb in range(cfg.n_codebooks):
+                h = h + params["embed"][cb][tok[..., cb]]
+        else:
+            h = params["embed"][tok]
+        if cfg.pos_embed == "sinusoidal":
+            p = jnp.full((1, 1), pos)
+            h = h + sinusoidal_positions(p, h.shape[-1]).astype(h.dtype)
+        return constrain(h, "batch", "seq", "d_model")
+
+    # -- cache construction ---------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        caches = {}
+        for stack in _layer_kind(cfg):
+            if stack == "dense_layers":
+                L = cfg.n_dense_layers
+            elif stack == "moe_layers":
+                L = cfg.n_layers - cfg.n_dense_layers
+            else:
+                L = cfg.n_layers
+            c = {}
+            if cfg.family != "ssm":
+                if cfg.mla is not None:
+                    m = cfg.mla
+                    c["c"] = jnp.zeros((L, batch, seq_len, m.kv_lora_rank),
+                                       dtype)
+                    c["kr"] = jnp.zeros((L, batch, seq_len, m.rope_head_dim),
+                                        dtype)
+                else:
+                    Sc = min(seq_len, cfg.sliding_window) \
+                        if cfg.sliding_window else seq_len
+                    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+                    c["k"] = jnp.zeros((L, batch, Sc, kvh, hd), dtype)
+                    c["v"] = jnp.zeros((L, batch, Sc, kvh, hd), dtype)
+            if cfg.family == "ssm" or cfg.hybrid:
+                s = cfg.ssm
+                nh = s.n_heads or (s.expand * cfg.d_model) // s.head_dim
+                c["h"] = jnp.zeros((L, batch, nh, s.head_dim, s.d_state),
+                                   jnp.float32)
+                c["conv_x"] = jnp.zeros((L, batch, s.conv_width - 1,
+                                         nh * s.head_dim), dtype)
+                c["conv_B"] = jnp.zeros((L, batch, s.conv_width - 1,
+                                         s.d_state), dtype)
+                c["conv_C"] = jnp.zeros((L, batch, s.conv_width - 1,
+                                         s.d_state), dtype)
+            caches[stack] = c
+        return caches
+
+
+def build_model(cfg: ModelConfig, **kw) -> Model:
+    return Model(cfg, **kw)

@@ -1,0 +1,101 @@
+"""Pure-JAX optimizers (no optax dependency).
+
+``sgd`` (the paper's local/client optimizer), ``momentum`` and ``adamw`` (for
+the non-federated reference trainer), plus lr schedules.  All follow the
+(init, update) pair convention over pytrees.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def sgd(lr):
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step=0):
+        lrv = lr(step) if callable(lr) else lr
+        new = jax.tree_util.tree_map(
+            lambda p, g: p - lrv * g.astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta=0.9):
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, step=0):
+        lrv = lr(step) if callable(lr) else lr
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new_p = jax.tree_util.tree_map(
+            lambda p, m: p - lrv * m.astype(p.dtype), params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        t = state["t"] + 1
+        lrv = lr(t) if callable(lr) else lr
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            step_ = mhat / (jnp.sqrt(vhat) + eps) + weight_decay \
+                * p.astype(jnp.float32)
+            return (p - lrv * step_).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        outs = [upd(p, g, m, v) for p, g, m, v in
+                zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+        return new_p, {"m": new_m, "v": new_v, "t": t}
+
+    return Optimizer(init, update)
+
+
+# -- schedules ----------------------------------------------------------------
+
+
+def cosine_schedule(base_lr, warmup, total):
+    def lr(t):
+        t = jnp.asarray(t, jnp.float32)
+        warm = base_lr * t / jnp.maximum(warmup, 1)
+        frac = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(t < warmup, warm, cos)
+    return lr
+
+
+def theory_eta(mu_bar, K, R):
+    """Theorem 1 stepsize: eta = log(KR)^2 / (mu_bar K R)."""
+    import math
+    return math.log(max(K * R, 2)) ** 2 / (mu_bar * K * R)

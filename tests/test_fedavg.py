@@ -1,0 +1,207 @@
+"""Core-algorithm tests: Algorithms 1 & 2, both executable forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.configs.base import SubmodelConfig, get_reduced_config
+from repro.core import submodel as sm
+from repro.core.fedavg import (make_mask_fed_round, make_window_fed_round,
+                               run_rounds)
+from repro.core.theory import QuadraticProblem
+from repro.data.synthetic import lm_batches
+from repro.models import build_model
+
+
+def _tiny_model():
+    cfg = replace(get_reduced_config("tinyllama_1_1b"), n_layers=2, vocab=64,
+                  d_model=64, d_ff=128, n_heads=4, n_kv_heads=2, head_dim=16)
+    m = build_model(cfg, remat=False)
+    return cfg, m
+
+
+def _batches(cfg, K, C, mb, S, seed=0):
+    return ({k: jnp.asarray(v) for k, v in b.items()}
+            for b in lm_batches(cfg.vocab, (K, C, mb), S, seed=seed))
+
+
+@pytest.mark.parametrize("scheme", ["rolling", "static", "random"])
+def test_window_mode_trains(scheme):
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme=scheme, capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1,
+                          axes=("d_ff", "heads", "kv_heads"))
+    fed = make_window_fed_round(m.loss, scfg, m.abstract_params(), m.axes())
+    p2, hist = run_rounds(fed, params, _batches(cfg, 2, 4, 2, 16), 6,
+                          jax.random.PRNGKey(1))
+    assert all(np.isfinite(hist))
+    assert hist[-1] < hist[0]
+
+
+@pytest.mark.parametrize("scheme", ["rolling", "static"])
+def test_window_equals_mask_mode(scheme):
+    """The compact slice path is the paper's dense-mask algorithm exactly."""
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme=scheme, capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1,
+                          axes=("d_ff", "heads", "kv_heads"))
+    ab, axes = m.abstract_params(), m.axes()
+    fedw = make_window_fed_round(m.loss, scfg, ab, axes)
+    fedm = make_mask_fed_round(m.loss, scfg, ab, axes, np.full(4, 0.5))
+    pw, hw = run_rounds(fedw, params, _batches(cfg, 2, 4, 2, 16), 4,
+                        jax.random.PRNGKey(1))
+    pm, hm = run_rounds(fedm, params, _batches(cfg, 2, 4, 2, 16), 4,
+                        jax.random.PRNGKey(1))
+    np.testing.assert_allclose(hw, hm, rtol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(pw),
+                    jax.tree_util.tree_leaves(pm)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_full_scheme_is_fedavg():
+    """capacity=1 / scheme=full reduces to plain FedAvg (identical params)."""
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="full", capacity=1.0, local_steps=1,
+                          clients_per_round=2, client_lr=0.1)
+    fed = make_window_fed_round(m.loss, scfg, m.abstract_params(), m.axes())
+    batch = next(_batches(cfg, 1, 2, 2, 16))
+    p2, _ = fed.round(params, batch, 0, jax.random.PRNGKey(1))
+    # manual fedavg
+    grads = []
+    for c in range(2):
+        mb = {k: v[0, c] for k, v in batch.items()}
+        (_, _), g = jax.value_and_grad(m.loss, has_aux=True)(params, mb)
+        grads.append(g)
+    manual = jax.tree_util.tree_map(
+        lambda p, g0, g1: p - 0.1 * (g0 + g1) / 2, params, *grads)
+    for a, b in zip(jax.tree_util.tree_leaves(p2),
+                    jax.tree_util.tree_leaves(manual)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_unmasked_coords_unchanged_one_round():
+    """Paper aggregation: coords outside every client's window keep w_r."""
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="static", capacity=0.25, local_steps=1,
+                          clients_per_round=2, client_lr=0.1,
+                          axes=("d_ff",))
+    fed = make_window_fed_round(m.loss, scfg, m.abstract_params(), m.axes())
+    batch = next(_batches(cfg, 1, 2, 2, 16))
+    p2, _ = fed.round(params, batch, 0, jax.random.PRNGKey(1))
+    # static windows cover d_ff [0:32); the tail [32:) of w_gate must be
+    # bit-identical to the old params
+    w0 = params["layers"]["mlp"]["w_gate"]
+    w1 = p2["layers"]["mlp"]["w_gate"]
+    np.testing.assert_array_equal(np.asarray(w0[..., 32:]),
+                                  np.asarray(w1[..., 32:]))
+    assert float(jnp.max(jnp.abs(w0[..., :32] - w1[..., :32]))) > 0
+
+
+def test_projection():
+    tree = {"a": jnp.ones((4,)) * 3.0}
+    out = sm.project_l2(tree, radius=1.0)
+    assert abs(float(sm.global_norm(out)) - 1.0) < 1e-5
+    out2 = sm.project_l2(tree, radius=100.0)
+    np.testing.assert_allclose(np.asarray(out2["a"]), 3.0)
+
+
+def test_bernoulli_masks_probability():
+    ab = {"w": jax.ShapeDtypeStruct((1000,), jnp.float32)}
+    masks = sm.bernoulli_masks(jax.random.PRNGKey(0), ab, 0.3)
+    frac = float(jnp.mean(masks["w"]))
+    assert 0.2 < frac < 0.4
+
+
+def test_quadratic_converges_to_masked_optimum():
+    """Thm 2 discussion: Bernoulli-masked training converges to argmin F_p,
+    not argmin F."""
+    prob = QuadraticProblem.make(n_clients=4, m=64, d=16, hetero=0.2, seed=0)
+    p = 0.6
+    scfg = SubmodelConfig(scheme="bernoulli", capacity=p, local_steps=2,
+                          clients_per_round=4, client_lr=0.05)
+    ab = {"w": jax.ShapeDtypeStruct((prob.dim,), jnp.float32)}
+    axes = {"w": ("d_model",)}
+
+    def loss(w, batch):
+        i = batch["client"][0]
+        A = prob.A[i][batch["idx"]]
+        b = prob.b[i][batch["idx"]]
+        r = A @ w["w"] - b
+        l = 0.5 * jnp.mean(r * r)
+        return l, {"loss": l}
+
+    fed = make_mask_fed_round(loss, scfg, ab, axes, np.full(4, p))
+    params = {"w": jnp.zeros(prob.dim)}
+    rng = np.random.default_rng(0)
+
+    def batches():
+        while True:
+            yield {"idx": jnp.asarray(rng.integers(0, 64, (2, 4, 16))),
+                   "client": jnp.broadcast_to(jnp.arange(4)[None, :, None],
+                                              (2, 4, 16))}
+    # NOTE loss uses batch['client'][0]; restructure: vmap over C gives
+    # per-client batch with leaves [mb]; use idx only and client id broadcast
+    params, hist = run_rounds(fed, params, batches(), 300,
+                              jax.random.PRNGKey(1))
+    w_p = prob.w_star_masked(np.full(4, p))
+    w_1 = prob.w_star()
+    d_p = float(np.linalg.norm(np.asarray(params["w"]) - w_p))
+    d_1 = float(np.linalg.norm(np.asarray(params["w"]) - w_1))
+    assert d_p < d_1, (d_p, d_1)   # closer to the masked optimum
+    assert d_p < 0.5 * float(np.linalg.norm(w_p))
+
+
+def test_server_optimizers():
+    """FedAvgM / FedAdam server steps train at least as well as plain
+    averaging on the tiny LM (beyond-paper feature)."""
+    import jax.numpy as jnp
+    from repro.core.server_opt import SERVER_OPTS
+    cfg, m = _tiny_model()
+    params0 = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1,
+                          axes=("d_ff", "heads", "kv_heads"))
+    fed = make_window_fed_round(m.loss, scfg, m.abstract_params(), m.axes())
+    finals = {}
+    for name in ("sgd", "momentum", "adam"):
+        opt = SERVER_OPTS[name](1.0 if name != "adam" else 0.1)
+        params = params0
+        state = opt.init(m.abstract_params())
+        it = _batches(cfg, 2, 4, 2, 16)
+        losses = []
+        for r in range(6):
+            batch = next(it)
+            params, state, metrics = fed.round_with_server_opt(
+                params, state, batch, r, opt, jax.random.PRNGKey(r))
+            losses.append(float(metrics["loss"]))
+        finals[name] = losses[-1]
+        assert np.isfinite(losses[-1]), name
+        assert min(losses[1:]) < losses[0], (name, losses)
+    # sanity: all three are in a sane band
+    assert max(finals.values()) - min(finals.values()) < 2.0
+
+
+def test_importance_scheme():
+    """Beyond-paper: importance-aware windows pick the max-mass grid window
+    and train; offsets are shared across clients and track weight mass."""
+    import jax.numpy as jnp
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="importance", capacity=0.5, local_steps=1,
+                          clients_per_round=2, client_lr=0.1,
+                          axes=("d_ff",))
+    fed = make_window_fed_round(m.loss, scfg, m.abstract_params(), m.axes())
+    # inflate the second d_ff half: importance must select offset 64
+    params["layers"]["mlp"]["w_gate"] = \
+        params["layers"]["mlp"]["w_gate"].at[..., 64:].mul(10.0)
+    offs = fed.scheme.importance_offsets(params, m.axes(), 2)
+    assert int(offs[("d_ff", 128)][0]) == 64
+    p2, hist = run_rounds(fed, params, _batches(cfg, 1, 2, 2, 16), 6,
+                          jax.random.PRNGKey(1))
+    assert all(np.isfinite(hist))
+    assert min(hist[1:]) < hist[0]

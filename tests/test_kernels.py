@@ -1,0 +1,150 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles, sweeping shapes and
+dtypes (interpret mode on CPU; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.masked_update import fillin_agg_2d, masked_sgd_2d
+from repro.kernels.rolling_matmul import rolling_matmul
+from repro.kernels.ssd_chunk import ssd_chunk_intra
+from repro.models.ssm import ssd_chunked
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", [(8, 128), (64, 1024), (200, 256)])
+def test_masked_sgd_kernel(shape, dtype):
+    k = jax.random.PRNGKey(0)
+    p = jax.random.normal(k, shape, dtype)
+    m = (jax.random.uniform(jax.random.PRNGKey(1), shape) > 0.5).astype(dtype)
+    g = jax.random.normal(jax.random.PRNGKey(2), shape, dtype)
+    out = masked_sgd_2d(p, m, g, 0.07)
+    want = ref.masked_sgd_ref(p, m, g, 0.07)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n_clients", [1, 4, 16])
+def test_fillin_agg_kernel(n_clients, dtype):
+    shape = (32, 256)
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, shape, dtype)
+    wc = jax.random.normal(jax.random.PRNGKey(1), (n_clients,) + shape, dtype)
+    mc = (jax.random.uniform(jax.random.PRNGKey(2), wc.shape) > 0.5
+          ).astype(dtype)
+    out = fillin_agg_2d(w, wc, mc, 1.0 / n_clients)
+    want = ref.fillin_agg_ref(w, wc, mc, 1.0 / n_clients)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("mkn,off,win", [
+    ((128, 256, 512), 0, 256),
+    ((128, 256, 512), 128, 256),
+    ((256, 384, 640), 256, 128),
+    ((128, 128, 128), 0, 128),
+])
+def test_rolling_matmul_kernel(mkn, off, win, dtype):
+    M, K, N = mkn
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), dtype)
+    y = rolling_matmul(x, w, off, win, bm=128, bn=128, bk=128)
+    want = ref.rolling_matmul_ref(x, w, off, win)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("nh,hd,N,Q,nh_block", [
+    (4, 8, 16, 16, 0), (8, 16, 32, 32, 4), (2, 32, 8, 8, 2),
+])
+def test_ssd_chunk_kernel_vs_jnp(nh, hd, N, Q, nh_block):
+    B, S = 2, 4 * Q
+    xr = jax.random.normal(jax.random.PRNGKey(0), (B, S, nh, hd)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (nh,)) * 0.3)
+    Br = jax.random.normal(jax.random.PRNGKey(3), (B, S, N)) * 0.5
+    Cr = jax.random.normal(jax.random.PRNGKey(4), (B, S, N)) * 0.5
+    y1, h1 = ssd_chunked(xr, dt, A, Br, Cr, Q)
+    y2, h2 = ops.ssd_chunk_scan(xr, dt, A, Br, Cr, Q, nh_block=nh_block)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_vs_sequential_oracle():
+    """Chunked SSD (jnp and Pallas paths) == step-by-step recurrence."""
+    B, S, nh, hd, N, Q = 2, 64, 4, 8, 16, 16
+    xr = jax.random.normal(jax.random.PRNGKey(0), (B, S, nh, hd)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (nh,)) * 0.3)
+    Br = jax.random.normal(jax.random.PRNGKey(3), (B, S, N)) * 0.5
+    Cr = jax.random.normal(jax.random.PRNGKey(4), (B, S, N)) * 0.5
+    y1, h1 = ssd_chunked(xr, dt, A, Br, Cr, Q)
+    yr, hr = jax.vmap(lambda x_, d_, B_, C_: ref.ssd_chunk_ref(
+        x_, d_, A, B_, C_))(xr, dt, Br, Cr)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(hr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tree_wrappers():
+    """ops.masked_sgd_tree / fillin_agg_tree on ragged pytrees."""
+    params = {"a": jnp.ones((7, 13)), "b": {"c": jnp.ones((33,))}}
+    masks = jax.tree_util.tree_map(lambda x: jnp.ones_like(x), params)
+    grads = jax.tree_util.tree_map(lambda x: 0.5 * jnp.ones_like(x), params)
+    out = ops.masked_sgd_tree(params, masks, grads, 0.1)
+    for leaf in jax.tree_util.tree_leaves(out):
+        np.testing.assert_allclose(np.asarray(leaf), 0.95, rtol=1e-6)
+    wc = jax.tree_util.tree_map(lambda x: jnp.stack([x * 2, x * 4]), params)
+    mc = jax.tree_util.tree_map(lambda x: jnp.stack([jnp.ones_like(x)] * 2),
+                                params)
+    agg = ops.fillin_agg_tree(params, wc, mc)
+    for leaf in jax.tree_util.tree_leaves(agg):
+        np.testing.assert_allclose(np.asarray(leaf), 3.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 64, 4, 2, 16, 16, 16, 0),
+    (1, 128, 8, 8, 32, 32, 32, 0),
+    (2, 64, 4, 2, 16, 16, 16, 24),   # sliding window
+    (1, 96, 6, 2, 8, 32, 32, 0),     # ragged block count
+])
+def test_flash_attention_kernel(shape):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import blockwise_attention
+    B, S, H, KV, hd, bq, bkv, win = shape
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    out = flash_attention(q, k, v, causal=True, window=win, bq=bq, bkv=bkv)
+    ref = blockwise_attention(q, k, v, causal=True, window=win,
+                              q_chunk=bq, kv_chunk=bkv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import blockwise_attention
+    B, S, H, KV, hd = 1, 64, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, bq=16, bkv=16)
+    ref = blockwise_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)

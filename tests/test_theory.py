@@ -1,0 +1,61 @@
+"""Theory-validation tests (the paper's bound structure, C4)."""
+import numpy as np
+import pytest
+
+from repro.core.theory import (QuadraticProblem, stationarity_translation,
+                               thm1_rate, thm1_residual, thm5_stability)
+
+
+def test_residual_vanishes_at_full_capacity():
+    assert thm1_residual(L=2.0, mu=0.5, G=1.0, W=2.0, d=10,
+                         probs=np.ones(4)) == pytest.approx(0.0)
+
+
+def test_residual_monotonic_in_masking():
+    vals = [thm1_residual(2.0, 0.5, 1.0, 2.0, 10, np.full(4, p))
+            for p in (0.9, 0.7, 0.5, 0.3)]
+    assert all(b > a for a, b in zip(vals, vals[1:]))
+
+
+def test_thm1_rate_decreases_in_R():
+    kw = dict(L=2.0, mu=0.5, G=1.0, W=2.0, d=10, probs=np.full(4, 0.5),
+              K=4, w0_dist=1.0, sigma_star=0.1, delta=0.1, N=4)
+    r1 = thm1_rate(R=10, **kw)
+    r2 = thm1_rate(R=100, **kw)
+    assert r2 < r1
+    # but both are lower-bounded by the residual
+    res = thm1_residual(2.0, 0.5, 1.0, 2.0, 10, np.full(4, 0.5))
+    assert r2 > res
+
+
+def test_stationarity_translation_monotone():
+    a = stationarity_translation(0.1, G=1.0, L=2.0, w_norm=1.0, d=10,
+                                 probs=np.full(4, 0.9))
+    b = stationarity_translation(0.1, G=1.0, L=2.0, w_norm=1.0, d=10,
+                                 probs=np.full(4, 0.5))
+    assert b > a
+
+
+def test_thm5_stability_shrinks_with_data():
+    kw = dict(G=1.0, L=2.0, delta=0.1, D_max=0.2, sigma_star=0.1,
+              probs=np.full(4, 0.5))
+    assert thm5_stability(N=4, n=1000, **kw) < thm5_stability(N=4, n=10,
+                                                              **kw)
+
+
+def test_quadratic_constants_and_optima():
+    prob = QuadraticProblem.make(n_clients=3, m=32, d=8, hetero=0.3, seed=1)
+    c = prob.constants()
+    assert c["L"] >= c["mu"] > 0
+    w = prob.w_star()
+    # gradient at optimum ~ 0
+    H = prob.hessian()
+    m = prob.A.shape[1]
+    g = np.einsum("nmd,nm->d", np.asarray(prob.A), np.asarray(prob.b)) \
+        / (3 * m)
+    np.testing.assert_allclose(H @ w, g, rtol=1e-4)
+    # masked optimum differs from the true one unless p=1
+    wp = prob.w_star_masked(np.full(3, 0.5))
+    assert np.linalg.norm(wp - w) > 1e-3
+    w1 = prob.w_star_masked(np.ones(3))
+    np.testing.assert_allclose(w1, w, rtol=1e-4)
