@@ -242,6 +242,13 @@ def kernels(rounds):
         - ref.rolling_matmul_ref(x, w, 128, 256))))
     emit("kernels", "rolling_matmul_maxerr", f"{err:.2e}")
 
+    from repro.kernels import dispatch
+    emit("kernels", "auto_backend", dispatch.resolve_backend())
+    derr = float(jnp.max(jnp.abs(
+        dispatch.rolling_matmul(x, w, 128, 256, backend="pallas")
+        - dispatch.rolling_matmul(x, w, 128, 256, backend="jnp"))))
+    emit("kernels", "dispatch_rolling_maxerr", f"{derr:.2e}")
+
 
 def fed_round(rounds):
     import jax
@@ -272,6 +279,87 @@ def fed_round(rounds):
     emit("fed_round", "tokens_per_round", 2 * 4 * 2 * 64)
 
 
+def fed_round_pallas(rounds):
+    """Both dispatch arms of a full MaskFedAvg.round on one model: the
+    Pallas-kernel arm must match the jnp-oracle arm (max|Δ| < 1e-5 fp32),
+    plus per-round timings and the fused window projection vs the
+    extract-then-matmul oracle."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import SubmodelConfig
+    from repro.core.fedavg import make_mask_fed_round
+    from repro.kernels import dispatch
+    from repro.models.layers import mlp_apply, mlp_apply_rolling
+
+    # Small two-layer MLP regression: ragged leaf shapes exercise the
+    # flatten/pad path of the tree-level kernels.
+    d_in, d_h, C, K = 24, 33, 4, 2
+    kp = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(kp, (d_in, d_h)) * 0.3,
+              "b1": jnp.zeros((d_h,)),
+              "w2": jax.random.normal(jax.random.fold_in(kp, 1),
+                                      (d_h,)) * 0.3}
+    ab = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    axes = {"w1": ("d_model", "d_ff"), "b1": ("d_ff",), "w2": ("d_ff",)}
+
+    def loss(w, b):
+        h = jnp.tanh(b["x"] @ w["w1"] + w["b1"])
+        r = h @ w["w2"] - b["y"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    rngb = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rngb.standard_normal((K, C, 8, d_in)),
+                              jnp.float32),
+             "y": jnp.asarray(rngb.standard_normal((K, C, 8)), jnp.float32)}
+    scfg = SubmodelConfig(scheme="bernoulli", capacity=0.5, local_steps=K,
+                          clients_per_round=C, client_lr=0.05)
+
+    outs, times = {}, {}
+    for backend in ("jnp", "pallas"):
+        fed = make_mask_fed_round(loss, scfg, ab, axes, np.full(C, 0.5),
+                                  kernel_backend=backend)
+        step = jax.jit(fed.round)
+        new, _ = step(params, batch, 0, jax.random.PRNGKey(7))  # compile
+        jax.block_until_ready(jax.tree_util.tree_leaves(new)[0])
+        t0 = time.time()
+        n = 5
+        for r in range(n):
+            new, _ = step(params, batch, 0, jax.random.PRNGKey(7))
+        jax.block_until_ready(jax.tree_util.tree_leaves(new)[0])
+        outs[backend] = new
+        times[backend] = (time.time() - t0) / n * 1e3
+        emit("fed_round_pallas", f"{backend}_round_ms",
+             round(times[backend], 2))
+
+    maxdelta = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(outs["pallas"]),
+        jax.tree_util.tree_leaves(outs["jnp"])))
+    emit("fed_round_pallas", "round_maxdelta", f"{maxdelta:.2e}")
+    emit("fed_round_pallas", "round_match_1e-5", int(maxdelta < 1e-5))
+
+    # Window projection: fused rolling matmul vs extract-then-matmul oracle.
+    D, F, win, off = 128, 512, 256, 128
+    p = {"w_gate": jax.random.normal(kp, (D, F)) * 0.1,
+         "w_up": jax.random.normal(jax.random.fold_in(kp, 2), (D, F)) * 0.1,
+         "w_down": jax.random.normal(jax.random.fold_in(kp, 3),
+                                     (F, D)) * 0.1}
+    x = jax.random.normal(jax.random.fold_in(kp, 4), (64, D))
+    sub = {k: jax.lax.dynamic_slice_in_dim(v, off, win,
+                                           axis=1 if k != "w_down" else 0)
+           for k, v in p.items()}
+    oracle = mlp_apply(sub, x)
+    for backend in ("jnp", "pallas"):
+        y = mlp_apply_rolling(p, x, off, win, backend=backend)
+        err = float(jnp.max(jnp.abs(y - oracle)))
+        emit("fed_round_pallas", f"rolling_mlp_{backend}_maxerr",
+             f"{err:.2e}")
+    emit("fed_round_pallas", "note",
+         "pallas arm runs in interpret mode off-TPU (emulation, not a "
+         "speed win); auto resolves to "
+         + dispatch.resolve_backend())
+
+
 def roofline(rounds):
     files = sorted(glob.glob("experiments/dryrun/*.json"))
     if not files:
@@ -295,6 +383,7 @@ BENCHES = {
     "thm5_stability": thm5_stability,
     "kernels": kernels,
     "fed_round": fed_round,
+    "fed_round_pallas": fed_round_pallas,
     "roofline": roofline,
 }
 

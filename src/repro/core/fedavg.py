@@ -31,6 +31,7 @@ from repro.configs.base import SubmodelConfig
 from repro.core import extract as ex
 from repro.core import submodel as sm
 from repro.core.masking import WindowScheme, collect_axis_dims, make_scheme
+from repro.kernels import dispatch
 from repro.sharding.policy import constrain_tree
 
 
@@ -47,6 +48,7 @@ class WindowFedAvg:
     axes_tree: Any
     scheme: WindowScheme
     spmd_axis: Any = None               # mesh axis pinning the client vmap
+    kernel_backend: Optional[str] = None  # pallas | jnp | auto (None = env)
 
     def _vmap(self, f, **kw):
         if self.spmd_axis is not None:
@@ -78,8 +80,8 @@ class WindowFedAvg:
         def kstep(carry, mb):
             subp = carry
             (loss, metrics), g = self._vmap(grad_fn)(subp, mb)
-            subp = jax.tree_util.tree_map(
-                lambda p, gr: p - c.client_lr * gr.astype(p.dtype), subp, g)
+            subp = dispatch.sgd_step(subp, g, c.client_lr,
+                                     backend=self.kernel_backend)
             subp = constrain_tree(subp, self.axes_tree)
             return subp, loss
 
@@ -128,7 +130,11 @@ class WindowFedAvg:
         """
         c = self.scfg
         C = c.clients_per_round
-        offsets = self.scheme.offsets(rng, round_idx, C)
+        if c.scheme == "importance":
+            offsets = self.scheme.importance_offsets(params, self.axes_tree,
+                                                     C)
+        else:
+            offsets = self.scheme.offsets(rng, round_idx, C)
         if offsets:
             sub0 = self._vmap(
                 lambda off: ex.extract(params, self.axes_tree, off,
@@ -142,8 +148,8 @@ class WindowFedAvg:
         def kstep(carry, mb):
             subp = carry
             (loss, metrics), g = self._vmap(grad_fn)(subp, mb)
-            subp = jax.tree_util.tree_map(
-                lambda p, gr: p - c.client_lr * gr.astype(p.dtype), subp, g)
+            subp = dispatch.sgd_step(subp, g, c.client_lr,
+                                     backend=self.kernel_backend)
             return constrain_tree(subp, self.axes_tree), loss
 
         subK, losses = jax.lax.scan(kstep, sub0, batch)
@@ -207,12 +213,13 @@ def _scatter_update(params, dbar, abstract, axes_tree, off0, sizes,
 
 
 def make_window_fed_round(model_loss_fn, scfg: SubmodelConfig, abstract,
-                          axes_tree, spmd_axis=None) -> WindowFedAvg:
+                          axes_tree, spmd_axis=None,
+                          kernel_backend=None) -> WindowFedAvg:
     dims = collect_axis_dims(abstract, axes_tree)
     scheme = make_scheme(scfg, dims)
     return WindowFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
                         axes_tree=axes_tree, scheme=scheme,
-                        spmd_axis=spmd_axis)
+                        spmd_axis=spmd_axis, kernel_backend=kernel_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +245,12 @@ def dense_client_masks(rng, abstract, axes_tree, scfg: SubmodelConfig,
 
     # structured (rolling / static / random): windows per semantic axis with
     # per-client traced offsets *and sizes* (dense masks allow ragged sizes).
+    if scfg.scheme not in ("static", "rolling", "random"):
+        # e.g. "importance" needs live params, which dense masks never see —
+        # refuse rather than silently training random windows.
+        raise ValueError(
+            f"scheme {scfg.scheme!r} is not supported in dense-mask mode; "
+            "use window mode (make_window_fed_round) instead")
     dims = windowed_dims or collect_axis_dims(abstract, axes_tree)
     keys = {k: i for i, k in enumerate(sorted(
         [d for d in dims if d[0] in scfg.axes]))}
@@ -289,6 +302,7 @@ class MaskFedAvg:
     abstract: Any
     axes_tree: Any
     capacities: jnp.ndarray            # [C]
+    kernel_backend: Optional[str] = None  # pallas | jnp | auto (None = env)
 
     def round(self, params, batch, round_idx, rng, capacities=None):
         """batch leaves [K, C, ...].  capacities: optional per-round [C]
@@ -297,7 +311,6 @@ class MaskFedAvg:
         capacities = self.capacities if capacities is None else capacities
         masks = dense_client_masks(rng, self.abstract, self.axes_tree, c,
                                    capacities, round_idx)
-        C = capacities.shape[0]
         w_c = jax.tree_util.tree_map(
             lambda w, m: w[None] * m.astype(w.dtype), params, masks)
 
@@ -306,22 +319,26 @@ class MaskFedAvg:
         def kstep(carry, mb):
             wc = carry
             (loss, metrics), g = jax.vmap(mvg)(wc, masks, mb)
-            wc = jax.vmap(sm.masked_sgd_step, in_axes=(0, 0, 0, None))(
-                wc, masks, g, c.client_lr)
+            # masked SGD is elementwise, so the stacked [C, ...] leaves go
+            # straight through the dispatched kernel — no client vmap.
+            wc = dispatch.masked_sgd(wc, masks, g, c.client_lr,
+                                     backend=self.kernel_backend)
             return wc, loss
 
         w_cK, losses = jax.lax.scan(kstep, w_c, batch)
-        new = sm.fillin_average(params, w_cK, jax.tree_util.tree_map(
-            lambda m: m, masks))
+        new = dispatch.fillin_agg(params, w_cK, masks,
+                                  backend=self.kernel_backend)
         new = sm.project_l2(new, c.proj_radius)
         return new, {"loss": losses.mean(), "client_loss": losses}
 
 
 def make_mask_fed_round(model_loss_fn, scfg: SubmodelConfig, abstract,
-                        axes_tree, capacities) -> MaskFedAvg:
+                        axes_tree, capacities,
+                        kernel_backend=None) -> MaskFedAvg:
     return MaskFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
                       axes_tree=axes_tree,
-                      capacities=jnp.asarray(capacities, jnp.float32))
+                      capacities=jnp.asarray(capacities, jnp.float32),
+                      kernel_backend=kernel_backend)
 
 
 # ---------------------------------------------------------------------------

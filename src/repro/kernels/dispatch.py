@@ -1,0 +1,148 @@
+"""Kernel backend dispatch: ``pallas`` | ``jnp`` | ``auto``.
+
+The fed-round hot paths (client masked SGD, server fill-in average, window
+matmuls) have two interchangeable arms:
+
+* **pallas** — the fused TPU kernels in this package (compiled on TPU;
+  interpret mode elsewhere, which is an emulation for testing, never a win);
+* **jnp**    — the pure-jnp oracles (``repro.kernels.ref`` /
+  ``repro.core.submodel``), which XLA handles well on CPU/GPU.
+
+``auto`` (the default, overridable via the ``REPRO_KERNEL_BACKEND`` env var)
+picks the Pallas arm only where it actually wins: compiled on a real TPU
+backend; the jnp oracle everywhere else.  Every dispatched op is
+tolerance-tested against its oracle arm in ``tests/test_dispatch.py``, and
+``benchmarks/run.py --only fed_round_pallas`` compares full rounds end to
+end.
+
+All ops accept ``backend=None`` (resolve from env) or an explicit member of
+``BACKENDS``; resolution happens at trace time so a jitted fed round bakes
+in one arm.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import submodel as sm
+from repro.kernels import compat, ref
+from repro.kernels.masked_update import sgd_2d
+from repro.kernels.ops import (_from_2d, _to_2d, fillin_agg_tree,
+                               masked_sgd_tree)
+from repro.kernels.rolling_matmul import rolling_matmul as _rolling_mm_pallas
+
+BACKENDS = ("pallas", "jnp", "auto")
+BACKEND_ENV = "REPRO_KERNEL_BACKEND"
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    """Pallas must run in interpret mode off-TPU (Mosaic needs a TPU)."""
+    return not on_tpu()
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve ``backend`` (or the env default) to a concrete arm."""
+    backend = backend or os.environ.get(BACKEND_ENV, "auto")
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if (on_tpu() and compat.PLTPU_AVAILABLE) else "jnp"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Elementwise fed-round ops (tree-level; leaves may carry leading client dims)
+# ---------------------------------------------------------------------------
+
+
+def masked_sgd(params, masks, grads, lr, backend=None):
+    """w ← w − η·(m ⊙ g) over a pytree.  The op is elementwise, so leaves may
+    carry any leading (client) axes; the pallas arm flattens them into the
+    rows×128-lane kernel layout."""
+    if resolve_backend(backend) == "jnp":
+        return sm.masked_sgd_step(params, masks, grads, lr)
+    return masked_sgd_tree(params, masks, grads, lr,
+                           interpret=interpret_mode())
+
+
+def sgd_step(params, grads, lr, backend=None):
+    """Unmasked client update w ← w − η·g (window mode trains compact
+    sub-models, so no mask exists)."""
+    if resolve_backend(backend) == "jnp":
+        return jax.tree_util.tree_map(
+            lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+    interp = interpret_mode()
+
+    def leaf(p, g):
+        p2, shape, pad = _to_2d(p)
+        g2, _, _ = _to_2d(g.astype(p.dtype))
+        return _from_2d(sgd_2d(p2, g2, lr, interpret=interp), shape, pad)
+
+    return jax.tree_util.tree_map(leaf, params, grads)
+
+
+def fillin_agg(server, client_params, client_masks, server_lr=1.0,
+               backend=None):
+    """Server fill-in average (delta form): w ← w + (s/C)·Σ_c m_c ⊙ (w_c − w).
+
+    ``client_params`` / ``client_masks`` leaves are stacked on a leading
+    client axis.  ``server_lr=1`` is the paper's plain average."""
+    if resolve_backend(backend) == "jnp":
+        if server_lr == 1.0:
+            return sm.fillin_average(server, client_params, client_masks)
+        return jax.tree_util.tree_map(
+            lambda w, ws, ms: (w.astype(jnp.float32) + server_lr
+                               * (ms * (ws - w[None])).mean(0)
+                               ).astype(w.dtype),
+            server, client_params, client_masks)
+    return fillin_agg_tree(server, client_params, client_masks,
+                           server_lr=server_lr, interpret=interpret_mode())
+
+
+# ---------------------------------------------------------------------------
+# Window matmul (the sub-model compute hot spot)
+# ---------------------------------------------------------------------------
+
+
+def _rolling_tileable(M, K, win, offset, bm, bn, bk, assume_aligned):
+    """Static check that the Pallas grid divides evenly and the offset lands
+    on a block boundary.  The kernel floor-rounds ``offset`` to a multiple of
+    ``bn`` (``off_blocks = offset // bn``), so an unaligned offset would be
+    silently wrong, not an error."""
+    bm, bn, bk = min(bm, M), min(bn, win), min(bk, K)
+    if M % bm or win % bn or K % bk:
+        return False
+    try:
+        return int(offset) % bn == 0
+    except (TypeError, jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        # Traced offset: alignment is unknowable here.  Only take the fused
+        # arm when the caller vouches for it (SubmodelConfig.align a multiple
+        # of the block width); otherwise the oracle arm is the safe default.
+        return assume_aligned
+
+
+def rolling_matmul(x, w, offset, win, backend=None, bm=128, bn=128, bk=128,
+                   assume_aligned=False):
+    """y[M, win] = x[M, K] @ w[K, offset : offset+win].
+
+    Pallas arm fuses the window into the matmul's index_map so inactive
+    columns of ``w`` are never read from HBM; jnp arm is the dynamic-slice
+    oracle.  Falls back to the oracle for shapes the MXU grid cannot tile,
+    and — because the kernel floor-rounds the offset to a block boundary —
+    for *traced* offsets unless ``assume_aligned=True`` (pass it when
+    ``SubmodelConfig.align`` is a multiple of ``bn``, as on TPU configs)."""
+    b = resolve_backend(backend)
+    M, K = x.shape
+    if b == "pallas" and _rolling_tileable(M, K, win, offset, bm, bn, bk,
+                                           assume_aligned):
+        return _rolling_mm_pallas(x, w, offset, win, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret_mode())
+    return ref.rolling_matmul_ref(x, w, offset, win)

@@ -24,8 +24,8 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import pl, vmem
 
 NEG_INF = -1e30
 
@@ -115,9 +115,9 @@ def flash_attention(q, k, v, *, causal=True, window=0, bq=512, bkv=512,
         out_specs=pl.BlockSpec((1, bq, G, hd), lambda b, i, j: (b, i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B * KV, Sq, G, hd), q.dtype),
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((bq, G), jnp.float32),
-            pltpu.MemorySpace.VMEM((bq, G), jnp.float32),
-            pltpu.MemorySpace.VMEM((bq, G, hd), jnp.float32),
+            vmem((bq, G), jnp.float32),
+            vmem((bq, G), jnp.float32),
+            vmem((bq, G, hd), jnp.float32),
         ],
         interpret=interpret,
     )(qg, kg, vg)

@@ -17,7 +17,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.compat import pl
 
 LANE = 128
 SUBLANE = 8
@@ -42,6 +43,28 @@ def masked_sgd_2d(p, m, g, lr, block_rows=256, interpret=True):
         out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
         interpret=interpret,
     )(p, m, g)
+
+
+def _sgd_kernel(p_ref, g_ref, o_ref, *, lr):
+    o_ref[...] = (p_ref[...].astype(jnp.float32)
+                  - lr * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def sgd_2d(p, g, lr, block_rows=256, interpret=True):
+    """Unmasked client update w ← w − η·g (window mode trains the compact
+    sub-model, so there is no mask to apply); same fused RMW layout as
+    ``masked_sgd_2d``."""
+    R, C = p.shape
+    br = min(block_rows, R)
+    spec = pl.BlockSpec((br, C), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_sgd_kernel, lr=float(lr)),
+        grid=(pl.cdiv(R, br),),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        interpret=interpret,
+    )(p, g)
 
 
 def _fillin_kernel(w_ref, wc_ref, mc_ref, o_ref, *, scale, n_clients):

@@ -37,6 +37,15 @@ def _from_2d(y, shape, pad):
     return flat.reshape(shape)
 
 
+def _stack_to_2d(x, cols):
+    """[C, ...] leaf -> [C, R, cols] with the same flatten/pad as _to_2d."""
+    C = x.shape[0]
+    flat = x.reshape(C, -1)
+    pad = (-flat.shape[1]) % cols
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat.reshape(C, -1, cols)
+
+
 def masked_sgd_tree(params, masks, grads, lr, interpret=True):
     """w <- w - lr * m * g over a whole pytree via the Pallas kernel."""
 
@@ -57,8 +66,8 @@ def fillin_agg_tree(server, client_params, client_masks, server_lr=1.0,
     def leaf(w, wc, mc):
         C = wc.shape[0]
         w2, shape, pad = _to_2d(w)
-        wc2 = jnp.stack([_to_2d(wc[c].astype(w.dtype))[0] for c in range(C)])
-        mc2 = jnp.stack([_to_2d(mc[c].astype(w.dtype))[0] for c in range(C)])
+        wc2 = _stack_to_2d(wc.astype(w.dtype), w2.shape[1])
+        mc2 = _stack_to_2d(mc.astype(w.dtype), w2.shape[1])
         out = fillin_agg_2d(w2, wc2, mc2, server_lr / C, interpret=interpret)
         return _from_2d(out, shape, pad)
 

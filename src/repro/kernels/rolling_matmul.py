@@ -22,8 +22,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import pl, prefetch_scalar_grid_spec, vmem
 
 
 def _rolling_mm_kernel(off_ref, x_ref, w_ref, o_ref, acc_ref, *, nk):
@@ -54,7 +54,7 @@ def rolling_matmul(x, w, offset, win, *, bm=128, bn=128, bk=128,
     nk = K // bk
     off_blocks = jnp.asarray(offset, jnp.int32)[None] // bn
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = prefetch_scalar_grid_spec(
         num_scalar_prefetch=1,
         grid=(M // bm, win // bn, nk),
         in_specs=[
@@ -62,7 +62,7 @@ def rolling_matmul(x, w, offset, win, *, bm=128, bn=128, bk=128,
             pl.BlockSpec((bk, bn), lambda i, j, k, off: (k, off[0] + j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, off: (i, j)),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[vmem((bm, bn), jnp.float32)],
     )
     return pl.pallas_call(
         functools.partial(_rolling_mm_kernel, nk=nk),

@@ -32,8 +32,13 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--scheme", default="rolling",
                     choices=["rolling", "random", "static", "full",
-                             "bernoulli"])
+                             "bernoulli", "importance"])
     ap.add_argument("--mode", default="window", choices=["window", "mask"])
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["auto", "pallas", "jnp"],
+                    help="fed-round kernel arm: fused Pallas kernels, jnp "
+                         "oracles, or auto (Pallas iff on TPU). Default: "
+                         "the REPRO_KERNEL_BACKEND env var, else auto")
     ap.add_argument("--capacity", type=float, default=0.5)
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=4)
@@ -58,10 +63,12 @@ def main():
     abstract = model.abstract_params()
     axes = model.axes()
     if args.mode == "window" and args.scheme != "bernoulli":
-        fed = make_window_fed_round(model.loss, scfg, abstract, axes)
+        fed = make_window_fed_round(model.loss, scfg, abstract, axes,
+                                    kernel_backend=args.kernel_backend)
     else:
         fed = make_mask_fed_round(model.loss, scfg, abstract, axes,
-                                  np.full(args.clients, args.capacity))
+                                  np.full(args.clients, args.capacity),
+                                  kernel_backend=args.kernel_backend)
 
     vision = (cfg.vision_patches, cfg.vision_d) if cfg.vision_stub else None
     it = lm_batches(cfg.vocab, (args.local_steps, args.clients, args.mb),

@@ -146,6 +146,31 @@ def mlp_apply(p, x, act="silu"):
     return (g * (x @ p["w_up"])) @ p["w_down"]
 
 
+def mlp_apply_rolling(p, x, offset, win, act="silu", backend=None,
+                      assume_aligned=False):
+    """Window-mode gated MLP on FULL weights reading only the active d_ff
+    window: equivalent to ``mlp_apply`` on the extracted sub-model, but the
+    window selection is fused into the matmul (``dispatch.rolling_matmul``
+    scalar-prefetch offset on TPU) instead of materializing W_sub copies —
+    the inactive columns never leave HBM.
+
+    p: full-shaped mlp params; offset: int32 (align-multiple); win: static.
+    ``assume_aligned=True`` lets *traced* offsets take the fused arm — only
+    set it when the window scheme aligns offsets to the 128-lane block.
+    """
+    from repro.kernels.dispatch import rolling_matmul  # lazy: no import cycle
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    g = act_fn(act)(rolling_matmul(x2, p["w_gate"], offset, win,
+                                   backend=backend,
+                                   assume_aligned=assume_aligned))
+    u = rolling_matmul(x2, p["w_up"], offset, win, backend=backend,
+                       assume_aligned=assume_aligned)
+    w_down = jax.lax.dynamic_slice_in_dim(p["w_down"], offset, win, axis=0)
+    out = (g * u) @ w_down
+    return out.reshape(*lead, out.shape[-1])
+
+
 # ---------------------------------------------------------------------------
 # Cross-entropy (vocab possibly sharded on `model`)
 # ---------------------------------------------------------------------------

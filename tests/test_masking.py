@@ -1,8 +1,9 @@
-"""Property-based tests (hypothesis) for the sub-model machinery invariants."""
+"""Deterministic tests for the sub-model machinery.  The hypothesis-based
+property sweeps live in ``test_masking_properties.py`` (skipped gracefully
+when hypothesis is not installed — see pyproject.toml [test] extra)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import SubmodelConfig
 from repro.core import extract as ex
@@ -28,54 +29,11 @@ AXES = {
 }
 
 
-def _rand_tree(seed=0):
+def rand_tree(seed=0):
     leaves, treedef = jax.tree_util.tree_flatten(AB)
     keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
     vals = [jax.random.normal(k, l.shape) for k, l in zip(keys, leaves)]
     return jax.tree_util.tree_unflatten(treedef, vals)
-
-
-@settings(max_examples=25, deadline=None)
-@given(capacity=st.sampled_from([0.25, 0.5, 0.75, 1.0]),
-       scheme=st.sampled_from(["rolling", "random", "static"]),
-       round_idx=st.integers(0, 12))
-def test_extract_scatter_roundtrip(capacity, scheme, round_idx):
-    """scatter(extract(w)) == w on the window, 0 elsewhere; and the dense
-    window mask reproduces exactly the same support."""
-    scfg = SubmodelConfig(scheme=scheme, capacity=capacity,
-                          axes=("d_ff", "heads", "kv_heads"))
-    dims = collect_axis_dims(AB, AXES)
-    sch = make_scheme(scfg, dims)
-    offs = sch.offsets(jax.random.PRNGKey(0), round_idx, 1)
-    off0 = {k: v[0] for k, v in offs.items()}
-    w = _rand_tree()
-    sub = ex.extract(w, AXES, off0, sch.sizes)
-    back = ex.scatter_delta(sub, AB, AXES, off0, sch.sizes)
-    mask = ex.window_mask(AB, AXES, off0, sch.sizes)
-    for b, m, orig in zip(jax.tree_util.tree_leaves(back),
-                          jax.tree_util.tree_leaves(mask),
-                          jax.tree_util.tree_leaves(w)):
-        np.testing.assert_array_equal(np.asarray(b),
-                                      np.asarray(orig * m))
-
-
-@settings(max_examples=20, deadline=None)
-@given(capacity=st.sampled_from([0.25, 0.5, 0.34]))
-def test_rolling_covers_every_unit(capacity):
-    """Across one epoch (R rounds) every unit of every windowed axis is
-    trained at least once (the FedRolex equal-coverage property)."""
-    scfg = SubmodelConfig(scheme="rolling", capacity=capacity,
-                          axes=("d_ff", "heads", "kv_heads"))
-    dims = collect_axis_dims(AB, AXES)
-    sch = make_scheme(scfg, dims)
-    for key, size in sch.sizes.items():
-        n = key[1]
-        covered = np.zeros(n, bool)
-        for r in range(sch.n_windows):
-            offs = sch.offsets(jax.random.PRNGKey(0), r, 1)
-            o = int(offs[key][0])
-            covered[o:o + size] = True
-        assert covered.all(), (key, covered)
 
 
 def test_gqa_coupling():
@@ -90,19 +48,6 @@ def test_gqa_coupling():
         offs = sch.offsets(jax.random.PRNGKey(0), r, 3)
         np.testing.assert_array_equal(np.asarray(offs[hkey]),
                                       np.asarray(offs[kvkey]) * 2)
-
-
-@settings(max_examples=15, deadline=None)
-@given(round_idx=st.integers(0, 8), seed=st.integers(0, 3))
-def test_random_offsets_in_bounds(round_idx, seed):
-    scfg = SubmodelConfig(scheme="random", capacity=0.5, seed=seed,
-                          axes=("d_ff", "heads", "kv_heads"))
-    dims = collect_axis_dims(AB, AXES)
-    sch = make_scheme(scfg, dims)
-    offs = sch.offsets(jax.random.PRNGKey(seed), round_idx, 8)
-    for key, size in sch.sizes.items():
-        o = np.asarray(offs[key])
-        assert (o >= 0).all() and (o + size <= key[1]).all()
 
 
 def test_never_windowed_axes():

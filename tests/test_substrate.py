@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint.checkpoint import load as ckpt_load, save as ckpt_save
 from repro.data.federated import (FederatedDataset, dirichlet_partition,
