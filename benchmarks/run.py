@@ -107,8 +107,8 @@ def thm1_residual(rounds):
     tracking the Theorem-1 residual term."""
     import jax
     import jax.numpy as jnp
+    from repro import api
     from repro.configs.base import SubmodelConfig
-    from repro.core.fedavg import make_mask_fed_round, run_rounds
     from repro.core.theory import QuadraticProblem, thm1_residual as resid
 
     prob = QuadraticProblem.make(n_clients=4, m=64, d=16, hetero=0.3, seed=0)
@@ -132,10 +132,11 @@ def thm1_residual(rounds):
     for p in (1.0, 0.7, 0.4):
         scfg = SubmodelConfig(scheme="bernoulli", capacity=p, local_steps=2,
                               clients_per_round=4, client_lr=0.05)
-        fed = make_mask_fed_round(loss, scfg, ab, {"w": ("d_model",)},
-                                  np.full(4, p))
-        params, _ = run_rounds(fed, {"w": jnp.zeros(prob.dim)}, batches(),
-                               rounds * 10, jax.random.PRNGKey(1))
+        fed = api.fed_round((loss, ab, {"w": ("d_model",)}), scfg,
+                            capacities=np.full(4, p))
+        trainer = api.Trainer(fed, {"w": jnp.zeros(prob.dim)},
+                              rng=jax.random.PRNGKey(1))
+        params, _ = trainer.run(batches(), rounds * 10)
         excess = prob.global_loss(params["w"]) - f_star
         excesses[p] = float(excess)
         bound = resid(consts["L"], consts["mu"], G=2.0, W=2.0, d=prob.dim,
@@ -150,8 +151,8 @@ def thm5_stability(rounds):
     """E||A(S)-A(S')|| on neighboring datasets: masked vs full training."""
     import jax
     import jax.numpy as jnp
+    from repro import api
     from repro.configs.base import SubmodelConfig
-    from repro.core.fedavg import make_mask_fed_round
     from repro.core.stability import stability_experiment
 
     d, n_per = 16, 32
@@ -193,8 +194,8 @@ def thm5_stability(rounds):
             return make_batches(Xp, yp)
 
         def make_fed(p=p, scfg=scfg):
-            return make_mask_fed_round(loss, scfg, ab, {"w": ("d_model",)},
-                                       np.full(4, p))
+            return api.fed_round((loss, ab, {"w": ("d_model",)}), scfg,
+                                 capacities=np.full(4, p))
 
         # Theorem-5 regime: small steps, early stopping — path stability,
         # not the (algorithm-independent) optimum shift, dominates.
@@ -253,8 +254,8 @@ def kernels(rounds):
 def fed_round(rounds):
     import jax
     import jax.numpy as jnp
+    from repro import api
     from repro.configs.base import SubmodelConfig, get_reduced_config
-    from repro.core.fedavg import make_window_fed_round
     from repro.data.synthetic import lm_batches
     from repro.models import build_model
 
@@ -264,9 +265,12 @@ def fed_round(rounds):
     scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
                           clients_per_round=4, client_lr=0.05,
                           axes=("d_ff", "heads", "kv_heads"))
-    fed = make_window_fed_round(m.loss, scfg, m.abstract_params(), m.axes())
+    fed = api.fed_round(m, scfg)
     it = lm_batches(cfg.vocab, (2, 4, 2), 64)
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    # timing microbench: step the jitted round directly so the n rounds
+    # dispatch asynchronously and sync once (Trainer's per-round metrics
+    # record would force a host round-trip into the measurement).
     step = jax.jit(fed.round)
     params, _ = step(params, batch, 0, jax.random.PRNGKey(1))  # compile
     t0 = time.time()
@@ -286,8 +290,8 @@ def fed_round_pallas(rounds):
     extract-then-matmul oracle."""
     import jax
     import jax.numpy as jnp
+    from repro import api
     from repro.configs.base import SubmodelConfig
-    from repro.core.fedavg import make_mask_fed_round
     from repro.kernels import dispatch
     from repro.models.layers import mlp_apply, mlp_apply_rolling
 
@@ -317,8 +321,12 @@ def fed_round_pallas(rounds):
 
     outs, times = {}, {}
     for backend in ("jnp", "pallas"):
-        fed = make_mask_fed_round(loss, scfg, ab, axes, np.full(C, 0.5),
-                                  kernel_backend=backend)
+        fed = api.fed_round((loss, ab, axes), scfg, mode="mask",
+                            capacities=np.full(C, 0.5),
+                            kernel_backend=backend)
+        # repeated-step microbench (same params every call, arms compared
+        # bit-for-bit) — steps the round directly rather than chaining a
+        # Trainer loop.
         step = jax.jit(fed.round)
         new, _ = step(params, batch, 0, jax.random.PRNGKey(7))  # compile
         jax.block_until_ready(jax.tree_util.tree_leaves(new)[0])

@@ -1,16 +1,17 @@
-"""Quickstart: distributed sub-model training (rolling windows) in ~40 lines.
+"""Quickstart: distributed sub-model training (rolling windows) in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a reduced TinyLlama-family model, partitions it into rolling
 sub-models (capacity 0.5), and runs 20 federated rounds (4 clients x 2 local
-steps) on synthetic bigram data — the compact window form of Algorithm 2.
+steps) on synthetic bigram data — the compact window form of Algorithm 2,
+driven entirely through the ``repro.api`` facade.
 """
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs.base import SubmodelConfig, get_reduced_config
-from repro.core.fedavg import make_window_fed_round, run_rounds
 from repro.data.synthetic import lm_batches
 from repro.models import build_model
 
@@ -21,15 +22,16 @@ params = model.init(jax.random.PRNGKey(0))
 scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
                       clients_per_round=4, client_lr=0.1,
                       axes=("d_ff", "heads", "kv_heads"))
-fed = make_window_fed_round(model.loss, scfg, model.abstract_params(),
-                            model.axes())
+fed = api.fed_round(model, scfg)   # mode="auto": rolling -> window form
 print("window sizes:", fed.scheme.sizes)
 
 batches = (
     {k: jnp.asarray(v) for k, v in b.items()}
     for b in lm_batches(cfg.vocab, (2, 4, 2), seq=64)
 )
-params, history = run_rounds(fed, params, batches, 20, jax.random.PRNGKey(1))
-print("loss:", " ".join(f"{h:.3f}" for h in history))
-assert history[-1] < history[0], "training should reduce the loss"
+trainer = api.Trainer(fed, params, rng=jax.random.PRNGKey(1))
+params, history = trainer.run(batches, 20)
+print("loss:", " ".join(f"{h['loss']:.3f}" for h in history))
+assert history[-1]["loss"] < history[0]["loss"], \
+    "training should reduce the loss"
 print("OK — clients only ever touched capacity-0.5 sub-models.")

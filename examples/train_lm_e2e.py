@@ -1,5 +1,6 @@
 """End-to-end driver: federated sub-model training of a language model for a
-few hundred rounds, with eval, checkpointing, and resume.
+few hundred rounds, with eval, checkpointing, and resume — all through the
+``repro.api`` facade (``fed_round`` + ``Trainer``).
 
     PYTHONPATH=src python examples/train_lm_e2e.py [--rounds 200]
     [--resume ckpt.npz]
@@ -16,9 +17,9 @@ from dataclasses import replace
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.checkpoint.checkpoint import load as ckpt_load, save as ckpt_save
 from repro.configs.base import SubmodelConfig, get_reduced_config
-from repro.core.fedavg import make_window_fed_round
 from repro.data.synthetic import lm_batches
 from repro.models import build_model
 
@@ -45,25 +46,23 @@ def main():
     scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
                           clients_per_round=8, client_lr=0.2,
                           axes=("d_ff", "heads", "kv_heads"))
-    fed = make_window_fed_round(model.loss, scfg, model.abstract_params(),
-                                model.axes())
-    step = jax.jit(fed.round)
+    fed = api.fed_round(model, scfg)
 
     it = lm_batches(cfg.vocab, (2, 8, 2), args.seq, seed=1)
     eval_batch = {"tokens": jnp.asarray(
         next(lm_batches(cfg.vocab, (16,), args.seq, seed=999))["tokens"])}
-    rng = jax.random.PRNGKey(1)
+
     t0 = time.time()
-    for r in range(start, start + args.rounds):
-        rng, sub = jax.random.split(rng)
-        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-        params, metrics = step(params, batch, r, sub)
-        if r % 20 == 0 or r == start + args.rounds - 1:
-            ev, _ = model.loss(params, eval_batch)
-            print(f"round {r:4d}  train {float(metrics['loss']):.4f}  "
-                  f"eval {float(ev):.4f}  "
-                  f"({(time.time()-t0)/max(r-start+1,1):.2f}s/round)",
-                  flush=True)
+
+    def log(s):
+        per = (time.time() - t0) / max(trainer.round_idx - start, 1)
+        print(f"{s}  ({per:.2f}s/round)", flush=True)
+
+    trainer = api.Trainer(
+        fed, params, rng=jax.random.PRNGKey(1),
+        eval_fn=lambda p: {"eval": float(model.loss(p, eval_batch)[0])},
+        eval_every=20, log_every=20, log_fn=log, start_round=start)
+    params, _ = trainer.run(it, args.rounds)
     ckpt_save(args.ckpt, params, {"round": start + args.rounds,
                                   "arch": cfg.name})
     print("checkpoint ->", args.ckpt)

@@ -1,0 +1,143 @@
+"""repro.api — the library's single public entry surface.
+
+One facade constructs a federated sub-model round in either executable
+form, with pluggable client/server optimizers::
+
+    from repro import api
+
+    fed = api.fed_round(model, scfg)                 # mode from the scheme
+    trainer = api.Trainer(fed, params, rng=0)
+    params, history = trainer.run(batches, n_rounds)
+
+``model`` is anything exposing the model-zoo protocol (``.loss``,
+``.abstract_params()``, ``.axes()``) or a raw ``(loss_fn, abstract,
+axes_tree)`` triple — the theory/benchmark problems use the latter.
+
+Mode selection (``mode="auto"``): ``bernoulli`` → dense-mask mode (the
+only form that can express unstructured Algorithm-1 masks); every other
+scheme → compact window mode (the production TPU path).  ``mode="mask"``
+forces the paper-faithful dense path (per-client heterogeneous
+``capacities`` supported); ``mode="window"`` forces the compact path.
+
+Deprecated constructors (kept as shims): ``make_window_fed_round`` /
+``make_mask_fed_round`` in ``repro.core.fedavg``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import SubmodelConfig
+from repro.core.fedavg import (MaskFedAvg, WindowFedAvg, _build_mask_fed,
+                               _build_window_fed, output_model, run_rounds)
+from repro.core.server_opt import SERVER_OPTS, ServerOpt
+from repro.core.trainer import Trainer, checkpoint_callback
+from repro.optim.client import (CLIENT_OPTS, ClientOpt, client_momentum,
+                                client_proximal, client_sgd,
+                                resolve_client_opt)
+
+__all__ = [
+    "fed_round", "Trainer", "checkpoint_callback", "output_model",
+    "run_rounds", "resolve_mode", "MODES",
+    "ClientOpt", "CLIENT_OPTS", "client_sgd", "client_momentum",
+    "client_proximal", "ServerOpt", "SERVER_OPTS",
+    "WindowFedAvg", "MaskFedAvg",
+]
+
+MODES = ("auto", "window", "mask")
+
+
+def resolve_mode(mode: str, scheme: str) -> str:
+    """``auto`` → ``mask`` for unstructured Bernoulli masks, else ``window``."""
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    if mode == "auto":
+        return "mask" if scheme == "bernoulli" else "window"
+    if mode == "window" and scheme == "bernoulli":
+        raise ValueError(
+            "scheme 'bernoulli' (unstructured Algorithm-1 masks) has no "
+            "compact window form; use mode='mask' or 'auto'")
+    return mode
+
+
+def _model_parts(model) -> Tuple[Any, Any, Any]:
+    if all(hasattr(model, a) for a in ("loss", "abstract_params", "axes")):
+        return model.loss, model.abstract_params(), model.axes()
+    if isinstance(model, (tuple, list)) and len(model) == 3:
+        return tuple(model)
+    raise TypeError(
+        "model must expose the model-zoo protocol (.loss, "
+        ".abstract_params(), .axes()) or be a (loss_fn, abstract, "
+        f"axes_tree) triple; got {type(model).__name__}")
+
+
+def _resolve_server_opt(server_opt, scfg: SubmodelConfig) \
+        -> Optional[ServerOpt]:
+    if server_opt is None or isinstance(server_opt, str) and \
+            server_opt in ("", "none"):
+        return None
+    if isinstance(server_opt, str):
+        if server_opt not in SERVER_OPTS:
+            raise ValueError(
+                f"unknown server optimizer {server_opt!r}; expected one of "
+                f"{sorted(SERVER_OPTS)} or 'none'")
+        if server_opt in ("sgd", "momentum"):
+            # these step in server_lr units (sgd(lr=server_lr) IS the
+            # paper's update); adam's adaptive step keeps its own scale.
+            return SERVER_OPTS[server_opt](lr=scfg.server_lr)
+        return SERVER_OPTS[server_opt]()
+    return server_opt
+
+
+def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
+              client_opt=None, server_opt=None,
+              kernel_backend: Optional[str] = None, spmd_axis=None,
+              capacities=None):
+    """Build one federated sub-model round (Algorithms 1 & 2).
+
+    Args:
+      model: model-zoo object or ``(loss_fn, abstract, axes_tree)`` triple.
+      scfg: the :class:`SubmodelConfig` (scheme, capacity, K, C, lrs, ...).
+      mode: ``auto`` (scheme-derived) | ``window`` (compact) | ``mask``
+        (dense, paper-faithful).
+      client_opt: local-step optimizer — a :class:`ClientOpt`, a registry
+        name (``sgd`` | ``momentum`` | ``proximal``), or None for the
+        paper's plain SGD.
+      server_opt: optional stateful server optimizer applied to the mean
+        delta — a ``ServerOpt``, a registry name (``sgd`` | ``momentum`` |
+        ``adam``), or None for the paper's plain averaging.  Registry
+        names ``sgd``/``momentum`` are built with ``lr=scfg.server_lr``
+        (so ``server_opt="sgd"`` is exactly the paper's update); ``adam``
+        keeps its adaptive-scale default.  Consumed by :class:`Trainer`
+        (which then steps ``round_with_server_opt``).
+      kernel_backend: ``pallas`` | ``jnp`` | ``auto`` (None = env default).
+      spmd_axis: mesh axis pinning the client vmap (window mode only).
+      capacities: mask mode only — per-client ``[C]`` fractions; defaults
+        to ``scfg.capacity`` for every client.
+
+    Returns a :class:`WindowFedAvg` or :class:`MaskFedAvg` whose ``round``
+    signature is identical across modes (mask mode additionally accepts
+    per-round ``capacities``).
+    """
+    loss_fn, abstract, axes_tree = _model_parts(model)
+    resolved = resolve_mode(mode, scfg.scheme)
+    client_opt = resolve_client_opt(client_opt)
+    server_opt = _resolve_server_opt(server_opt, scfg)
+    if resolved == "window":
+        if capacities is not None:
+            raise ValueError("per-client capacities are a dense-mask-mode "
+                             "feature; window mode uses scfg.capacity")
+        return _build_window_fed(loss_fn, scfg, abstract, axes_tree,
+                                 spmd_axis=spmd_axis,
+                                 kernel_backend=kernel_backend,
+                                 client_opt=client_opt,
+                                 server_opt=server_opt)
+    if spmd_axis is not None:
+        raise ValueError("spmd_axis applies to window mode only")
+    if capacities is None:
+        capacities = np.full(scfg.clients_per_round, scfg.capacity,
+                             np.float32)
+    return _build_mask_fed(loss_fn, scfg, abstract, axes_tree, capacities,
+                           kernel_backend=kernel_backend,
+                           client_opt=client_opt, server_opt=server_opt)

@@ -179,6 +179,12 @@ class SubmodelConfig:
     wrap: bool = False             # FedRolex wraparound windows (small models)
     align: int = 1                 # round window sizes/offsets to multiples
     stagger: bool = False          # rolling: rotate window per client (beyond-paper)
+    # Window-mode aggregation fast path: average sub-model deltas then do a
+    # single scatter when every client trains the same window.  None derives
+    # it from the scheme (rolling/static/importance without stagger); False
+    # forces the per-client scatter baseline (the old REPRO_NO_SHARED_WINDOW
+    # env knob, now only a documented default in launch/train.py).
+    shared_window: Optional[bool] = None
 
 
 @dataclass(frozen=True)

@@ -1,28 +1,37 @@
 """Distributed sub-model training rounds — Algorithms 1 & 2 of the paper.
 
-Two executable forms of one algorithm family:
+Two executable forms of one algorithm family, one code path each:
 
-* **window mode** (`make_window_fed_round`) — the production TPU path.
-  Clients live on the mesh `data` (x `pod`) axis; each round every client
-  group extracts a *compact* sub-model (contiguous windows per semantic
-  axis), runs K local SGD steps (`lax.scan`), and the server applies the
-  fill-in average in delta form (sequential scatter-add, one full-model
-  accumulator) followed by the optional l2 projection.  The whole round is
+* **window mode** (`WindowFedAvg`) — the production TPU path.  Clients
+  live on the mesh `data` (x `pod`) axis; each round every client group
+  extracts a *compact* sub-model (contiguous windows per semantic axis),
+  runs K local optimizer steps (`lax.scan`), and the server applies the
+  fill-in average in delta form (shared-window scatter or sequential
+  scatter-add) followed by the optional l2 projection.  The whole round is
   one jitted SPMD program — this is what the multi-pod dry-run lowers.
 
-* **mask mode** (`make_mask_fed_round`) — the paper's literal formulation
-  with dense masks (supports unstructured Bernoulli masks of Algorithm 1 and
+* **mask mode** (`MaskFedAvg`) — the paper's literal formulation with
+  dense masks (supports unstructured Bernoulli masks of Algorithm 1 and
   per-client heterogeneous capacities).  Used for the faithful experiments
   and as the oracle for property tests (window mode == mask mode when the
   masks are the window indicators).
 
-Batch layout (window mode): every batch leaf is [K, C, ...] — local-step
-major, then client.
+Both rounds share the same internal phases — client offsets/masks →
+``_client_phase`` (extract → K-step scan → delta) → aggregation — and both
+take a pluggable :class:`repro.optim.client.ClientOpt` for the local steps
+and an optional stateful server optimizer (`round_with_server_opt`) that
+treats the mean delta as a pseudo-gradient.
+
+Construct rounds through :func:`repro.api.fed_round` (the public facade);
+``make_window_fed_round`` / ``make_mask_fed_round`` remain as deprecated
+shims.  Batch layout: every batch leaf is [K, C, ...] — local-step major,
+then client.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +41,31 @@ from repro.core import extract as ex
 from repro.core import submodel as sm
 from repro.core.masking import WindowScheme, collect_axis_dims, make_scheme
 from repro.kernels import dispatch
+from repro.optim.client import ClientOpt, client_sgd, resolve_client_opt
 from repro.sharding.policy import constrain_tree
+
+_SHARED_WINDOW_SCHEMES = ("rolling", "static", "importance")
+
+
+def resolve_shared_window(scfg: SubmodelConfig) -> bool:
+    """Resolve ``SubmodelConfig.shared_window`` once, at construction.
+
+    ``None`` (the default) means "derive from the scheme": rolling/static/
+    importance without stagger put every client on the SAME window, so the
+    aggregation can average sub-model deltas first and scatter once.  An
+    explicit ``False`` forces the per-client scatter path (the old
+    ``REPRO_NO_SHARED_WINDOW`` baseline knob); an explicit ``True`` is only
+    valid when the scheme actually shares windows.
+    """
+    derived = (scfg.scheme in _SHARED_WINDOW_SCHEMES and not scfg.stagger)
+    if scfg.shared_window is None:
+        return derived
+    if scfg.shared_window and not derived:
+        raise ValueError(
+            f"shared_window=True requires a shared-window scheme "
+            f"({'/'.join(_SHARED_WINDOW_SCHEMES)}, stagger=False); got "
+            f"scheme={scfg.scheme!r} stagger={scfg.stagger}")
+    return scfg.shared_window
 
 
 # ---------------------------------------------------------------------------
@@ -49,22 +82,31 @@ class WindowFedAvg:
     scheme: WindowScheme
     spmd_axis: Any = None               # mesh axis pinning the client vmap
     kernel_backend: Optional[str] = None  # pallas | jnp | auto (None = env)
+    client_opt: Optional[ClientOpt] = None  # None = the paper's plain SGD
+    server_opt: Any = None              # ServerOpt used by Trainer (optional)
+    shared_window: Optional[bool] = None  # None = resolve from scfg
+
+    def __post_init__(self):
+        if self.shared_window is None:
+            self.shared_window = resolve_shared_window(self.scfg)
+        self.client_opt = resolve_client_opt(self.client_opt)
 
     def _vmap(self, f, **kw):
         if self.spmd_axis is not None:
             return jax.vmap(f, spmd_axis_name=self.spmd_axis, **kw)
         return jax.vmap(f, **kw)
 
-    def round(self, params, batch, round_idx, rng=None):
-        """One communication round.  batch leaves: [K, C, ...]."""
-        c = self.scfg
-        C = c.clients_per_round
-        if c.scheme == "importance":
-            offsets = self.scheme.importance_offsets(params, self.axes_tree,
-                                                     C)
-        else:
-            offsets = self.scheme.offsets(rng, round_idx, C)
+    # -- composable round phases ---------------------------------------------
 
+    def _client_offsets(self, params, round_idx, rng):
+        C = self.scfg.clients_per_round
+        if self.scfg.scheme == "importance":
+            return self.scheme.importance_offsets(params, self.axes_tree, C)
+        return self.scheme.offsets(rng, round_idx, C)
+
+    def _extract_clients(self, params, offsets):
+        """Per-client compact sub-models, stacked on a leading C axis."""
+        C = self.scfg.clients_per_round
         if offsets:
             sub0 = self._vmap(
                 lambda off: ex.extract(params, self.axes_tree, off,
@@ -73,22 +115,36 @@ class WindowFedAvg:
         else:  # full-model training: every client gets a replica
             sub0 = jax.tree_util.tree_map(
                 lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
-        sub0 = constrain_tree(sub0, self.axes_tree)
+        return constrain_tree(sub0, self.axes_tree)
 
+    def _client_phase(self, params, batch, offsets):
+        """extract → K local-optimizer steps (scan) → delta."""
+        c = self.scfg
+        sub0 = self._extract_clients(params, offsets)
         grad_fn = jax.value_and_grad(self.loss_fn, has_aux=True)
+        opt = self.client_opt
 
         def kstep(carry, mb):
-            subp = carry
+            subp, ost = carry
             (loss, metrics), g = self._vmap(grad_fn)(subp, mb)
-            subp = dispatch.sgd_step(subp, g, c.client_lr,
-                                     backend=self.kernel_backend)
+            subp, ost = opt.update(subp, g, ost, c.client_lr,
+                                   backend=self.kernel_backend)
             subp = constrain_tree(subp, self.axes_tree)
-            return subp, loss
+            return (subp, ost), loss
 
-        subK, losses = jax.lax.scan(kstep, sub0, batch)
-        delta = jax.tree_util.tree_map(lambda a, b: a - b, subK, sub0)
+        (subK, _), losses = jax.lax.scan(kstep, (sub0, opt.init(sub0)),
+                                         batch)
+        # delta in f32: a bf16 subtraction would quantize small K-step
+        # updates to 0 and starve the server pseudo-gradient.
+        delta = jax.tree_util.tree_map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            subK, sub0)
+        return sub0, delta, losses
 
-        # Aggregation (delta form of the paper's fill-in average).
+    def _apply_mean_delta(self, params, delta, offsets):
+        """Plain averaging (the paper's fill-in update, delta form)."""
+        c = self.scfg
+        C = c.clients_per_round
         if self.shared_window and offsets:
             # Rolling/static without stagger: every client trains the SAME
             # window (Algorithm 2), so average client deltas first (one
@@ -97,99 +153,90 @@ class WindowFedAvg:
             off0 = {k: v[0] for k, v in offsets.items()}
             dbar = jax.tree_util.tree_map(
                 lambda d: jnp.mean(d.astype(jnp.float32), axis=0), delta)
-            new = _scatter_update(params, dbar, self.abstract,
-                                  self.axes_tree, off0, self.scheme.sizes,
-                                  c.server_lr)
-        else:
-            def acc_step(acc, xs):
-                d_c, off_c = xs
-                full_d = ex.scatter_delta(d_c, self.abstract, self.axes_tree,
-                                          off_c, self.scheme.sizes)
-                acc = jax.tree_util.tree_map(
-                    lambda a, b: a + b.astype(a.dtype), acc, full_d)
-                return constrain_tree(acc, self.axes_tree, leading=()), None
+            return _scatter_update(params, dbar, self.abstract,
+                                   self.axes_tree, off0, self.scheme.sizes,
+                                   c.server_lr)
 
-            acc0 = jax.tree_util.tree_map(
-                lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
-            acc, _ = jax.lax.scan(acc_step, acc0, (delta, offsets))
-            new = jax.tree_util.tree_map(
-                lambda w, d: (w + c.server_lr * d.astype(jnp.float32) / C
-                              ).astype(w.dtype), params, acc)
-        new = sm.project_l2(new, c.proj_radius)
+        def acc_step(acc, xs):
+            d_c, off_c = xs
+            full_d = ex.scatter_delta(d_c, self.abstract, self.axes_tree,
+                                      off_c, self.scheme.sizes)
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype), acc, full_d)
+            return constrain_tree(acc, self.axes_tree, leading=()), None
+
+        acc0 = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
+        acc, _ = jax.lax.scan(acc_step, acc0, (delta, offsets))
+        return jax.tree_util.tree_map(
+            lambda w, d: (w + c.server_lr * d.astype(jnp.float32) / C
+                          ).astype(w.dtype), params, acc)
+
+    def _mean_delta_full(self, params, delta, offsets):
+        """Full-shaped f32 mean client delta (the server pseudo-gradient).
+
+        Deliberately separate from :meth:`_apply_mean_delta`: stateful
+        server optimizers need the delta materialized full-shaped (their
+        state covers every coordinate), while the plain path's shared-window
+        arm updates only the window slice in place — collapsing the two
+        would force full-model traffic on the fast path.  Keep changes to
+        the scatter logic mirrored between both helpers.
+        """
+        C = self.scfg.clients_per_round
+        dbar = jax.tree_util.tree_map(
+            lambda d: jnp.mean(d.astype(jnp.float32), axis=0), delta)
+        if not offsets:
+            return dbar
+        if self.shared_window:
+            off0 = {k: v[0] for k, v in offsets.items()}
+            return ex.scatter_delta(dbar, self.abstract, self.axes_tree,
+                                    off0, self.scheme.sizes)
+
+        # staggered/random windows: average the per-client scatters
+        def acc_step(acc, xs):
+            d_c, off_c = xs
+            fd = ex.scatter_delta(d_c, self.abstract, self.axes_tree,
+                                  off_c, self.scheme.sizes)
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype) / C, acc, fd)
+            return constrain_tree(acc, self.axes_tree, leading=()), None
+
+        z = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
+        full, _ = jax.lax.scan(acc_step, z, (delta, offsets))
+        return full
+
+    # -- public rounds (both delegate to the phases above) ---------------------
+
+    def round(self, params, batch, round_idx, rng=None):
+        """One communication round.  batch leaves: [K, C, ...]."""
+        offsets = self._client_offsets(params, round_idx, rng)
+        _, delta, losses = self._client_phase(params, batch, offsets)
+        new = self._apply_mean_delta(params, delta, offsets)
+        new = sm.project_l2(new, self.scfg.proj_radius)
         return new, {"loss": losses.mean(), "client_loss": losses}
 
     def round_with_server_opt(self, params, opt_state, batch, round_idx,
-                              server_opt, rng=None):
+                              server_opt=None, rng=None):
         """Beyond-paper: treat the averaged client delta as a pseudo-gradient
         for a stateful server optimizer (FedAvgM / FedAdam).
 
-        Runs the same client phase as :meth:`round`; the aggregation applies
+        Same client phase as :meth:`round`; the aggregation applies
         ``server_opt.update`` on the full-shaped mean delta (momentum /
         second-moment state is full-shaped; out-of-window coordinates see
         delta 0, so their momentum decays — fill-in semantics preserved).
         """
-        c = self.scfg
-        C = c.clients_per_round
-        if c.scheme == "importance":
-            offsets = self.scheme.importance_offsets(params, self.axes_tree,
-                                                     C)
-        else:
-            offsets = self.scheme.offsets(rng, round_idx, C)
-        if offsets:
-            sub0 = self._vmap(
-                lambda off: ex.extract(params, self.axes_tree, off,
-                                       self.scheme.sizes))(offsets)
-        else:
-            sub0 = jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
-        sub0 = constrain_tree(sub0, self.axes_tree)
-        grad_fn = jax.value_and_grad(self.loss_fn, has_aux=True)
-
-        def kstep(carry, mb):
-            subp = carry
-            (loss, metrics), g = self._vmap(grad_fn)(subp, mb)
-            subp = dispatch.sgd_step(subp, g, c.client_lr,
-                                     backend=self.kernel_backend)
-            return constrain_tree(subp, self.axes_tree), loss
-
-        subK, losses = jax.lax.scan(kstep, sub0, batch)
-        dbar = jax.tree_util.tree_map(
-            lambda a, b: jnp.mean(a.astype(jnp.float32)
-                                  - b.astype(jnp.float32), axis=0),
-            subK, sub0)
-        if offsets:
-            off0 = {k: v[0] for k, v in offsets.items()}
-            full_delta = ex.scatter_delta(dbar, self.abstract,
-                                          self.axes_tree, off0,
-                                          self.scheme.sizes) \
-                if self.shared_window else None
-            if full_delta is None:
-                # staggered/random windows: average the per-client scatters
-                def acc_step(acc, xs):
-                    d_c, off_c = xs
-                    fd = ex.scatter_delta(d_c, self.abstract, self.axes_tree,
-                                          off_c, self.scheme.sizes)
-                    return jax.tree_util.tree_map(
-                        lambda a, b: a + b.astype(a.dtype) / C, acc, fd), None
-                delta_c = jax.tree_util.tree_map(
-                    lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                    subK, sub0)
-                z = jax.tree_util.tree_map(
-                    lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
-                full_delta, _ = jax.lax.scan(acc_step, z, (delta_c, offsets))
-        else:
-            full_delta = dbar
+        server_opt = server_opt if server_opt is not None else self.server_opt
+        if server_opt is None:
+            raise ValueError(
+                "no server optimizer attached; pass server_opt= or build "
+                "the round with api.fed_round(..., server_opt=...)")
+        offsets = self._client_offsets(params, round_idx, rng)
+        _, delta, losses = self._client_phase(params, batch, offsets)
+        full_delta = self._mean_delta_full(params, delta, offsets)
         new, opt_state = server_opt.update(params, full_delta, opt_state)
-        new = sm.project_l2(new, c.proj_radius)
-        return new, opt_state, {"loss": losses.mean()}
-
-    @property
-    def shared_window(self):
-        import os
-        if os.environ.get("REPRO_NO_SHARED_WINDOW"):  # baseline repro knob
-            return False
-        return self.scfg.scheme in ("rolling", "static", "importance") \
-            and not self.scfg.stagger
+        new = sm.project_l2(new, self.scfg.proj_radius)
+        return new, opt_state, {"loss": losses.mean(), "client_loss": losses}
 
 
 def _scatter_update(params, dbar, abstract, axes_tree, off0, sizes,
@@ -210,16 +257,6 @@ def _scatter_update(params, dbar, abstract, axes_tree, off0, sizes,
         jax.tree_util.tree_map(lambda a, b: (a, b), params, dbar,
                                is_leaf=lambda x: not isinstance(x, dict)),
         abstract, axes_tree)
-
-
-def make_window_fed_round(model_loss_fn, scfg: SubmodelConfig, abstract,
-                          axes_tree, spmd_axis=None,
-                          kernel_backend=None) -> WindowFedAvg:
-    dims = collect_axis_dims(abstract, axes_tree)
-    scheme = make_scheme(scfg, dims)
-    return WindowFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
-                        axes_tree=axes_tree, scheme=scheme,
-                        spmd_axis=spmd_axis, kernel_backend=kernel_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -250,7 +287,8 @@ def dense_client_masks(rng, abstract, axes_tree, scfg: SubmodelConfig,
         # refuse rather than silently training random windows.
         raise ValueError(
             f"scheme {scfg.scheme!r} is not supported in dense-mask mode; "
-            "use window mode (make_window_fed_round) instead")
+            "use window mode (repro.api.fed_round(..., mode='window')) "
+            "instead")
     dims = windowed_dims or collect_axis_dims(abstract, axes_tree)
     keys = {k: i for i, k in enumerate(sorted(
         [d for d in dims if d[0] in scfg.axes]))}
@@ -303,10 +341,16 @@ class MaskFedAvg:
     axes_tree: Any
     capacities: jnp.ndarray            # [C]
     kernel_backend: Optional[str] = None  # pallas | jnp | auto (None = env)
+    client_opt: Optional[ClientOpt] = None  # None = the paper's plain SGD
+    server_opt: Any = None              # ServerOpt used by Trainer (optional)
 
-    def round(self, params, batch, round_idx, rng, capacities=None):
-        """batch leaves [K, C, ...].  capacities: optional per-round [C]
-        (heterogeneous participation — the paper's 10%-of-100-clients)."""
+    def __post_init__(self):
+        self.client_opt = resolve_client_opt(self.client_opt)
+
+    # -- composable round phases ---------------------------------------------
+
+    def _client_phase(self, params, batch, round_idx, rng, capacities=None):
+        """masks → m ⊙ w → K masked local-optimizer steps (scan)."""
         c = self.scfg
         capacities = self.capacities if capacities is None else capacities
         masks = dense_client_masks(rng, self.abstract, self.axes_tree, c,
@@ -315,30 +359,99 @@ class MaskFedAvg:
             lambda w, m: w[None] * m.astype(w.dtype), params, masks)
 
         mvg = sm.masked_value_and_grad(self.loss_fn)
+        opt = self.client_opt
 
         def kstep(carry, mb):
-            wc = carry
+            wc, ost = carry
             (loss, metrics), g = jax.vmap(mvg)(wc, masks, mb)
-            # masked SGD is elementwise, so the stacked [C, ...] leaves go
-            # straight through the dispatched kernel — no client vmap.
-            wc = dispatch.masked_sgd(wc, masks, g, c.client_lr,
-                                     backend=self.kernel_backend)
-            return wc, loss
+            # masked updates are elementwise, so the stacked [C, ...] leaves
+            # go straight through the dispatched kernel — no client vmap.
+            wc, ost = opt.update(wc, g, ost, c.client_lr, masks=masks,
+                                 backend=self.kernel_backend)
+            return (wc, ost), loss
 
-        w_cK, losses = jax.lax.scan(kstep, w_c, batch)
+        (w_cK, _), losses = jax.lax.scan(kstep, (w_c, opt.init(w_c)), batch)
+        return w_cK, masks, losses
+
+    # -- public rounds ---------------------------------------------------------
+
+    def round(self, params, batch, round_idx, rng, capacities=None):
+        """batch leaves [K, C, ...].  capacities: optional per-round [C]
+        (heterogeneous participation — the paper's 10%-of-100-clients)."""
+        w_cK, masks, losses = self._client_phase(params, batch, round_idx,
+                                                 rng, capacities)
         new = dispatch.fillin_agg(params, w_cK, masks,
+                                  server_lr=self.scfg.server_lr,
                                   backend=self.kernel_backend)
-        new = sm.project_l2(new, c.proj_radius)
+        new = sm.project_l2(new, self.scfg.proj_radius)
         return new, {"loss": losses.mean(), "client_loss": losses}
+
+    def round_with_server_opt(self, params, opt_state, batch, round_idx,
+                              server_opt=None, rng=None, capacities=None):
+        """Stateful server step on the masked mean delta (pseudo-gradient),
+        mirroring :meth:`WindowFedAvg.round_with_server_opt`."""
+        server_opt = server_opt if server_opt is not None else self.server_opt
+        if server_opt is None:
+            raise ValueError(
+                "no server optimizer attached; pass server_opt= or build "
+                "the round with api.fed_round(..., server_opt=...)")
+        w_cK, masks, losses = self._client_phase(params, batch, round_idx,
+                                                 rng, capacities)
+        dbar = jax.tree_util.tree_map(
+            lambda w, ws, ms: (ms * (ws.astype(jnp.float32)
+                                     - w[None].astype(jnp.float32))).mean(0),
+            params, w_cK, masks)
+        new, opt_state = server_opt.update(params, dbar, opt_state)
+        new = sm.project_l2(new, self.scfg.proj_radius)
+        return new, opt_state, {"loss": losses.mean(),
+                                "client_loss": losses}
+
+
+# ---------------------------------------------------------------------------
+# Deprecated factory shims — use repro.api.fed_round instead
+# ---------------------------------------------------------------------------
+
+
+def _build_window_fed(model_loss_fn, scfg: SubmodelConfig, abstract,
+                      axes_tree, spmd_axis=None, kernel_backend=None,
+                      client_opt=None, server_opt=None) -> WindowFedAvg:
+    dims = collect_axis_dims(abstract, axes_tree)
+    scheme = make_scheme(scfg, dims)
+    return WindowFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
+                        axes_tree=axes_tree, scheme=scheme,
+                        spmd_axis=spmd_axis, kernel_backend=kernel_backend,
+                        client_opt=client_opt, server_opt=server_opt)
+
+
+def _build_mask_fed(model_loss_fn, scfg: SubmodelConfig, abstract, axes_tree,
+                    capacities, kernel_backend=None, client_opt=None,
+                    server_opt=None) -> MaskFedAvg:
+    return MaskFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
+                      axes_tree=axes_tree,
+                      capacities=jnp.asarray(capacities, jnp.float32),
+                      kernel_backend=kernel_backend, client_opt=client_opt,
+                      server_opt=server_opt)
+
+
+def make_window_fed_round(model_loss_fn, scfg: SubmodelConfig, abstract,
+                          axes_tree, spmd_axis=None,
+                          kernel_backend=None) -> WindowFedAvg:
+    """Deprecated: use ``repro.api.fed_round(model, scfg, mode="window")``."""
+    warnings.warn("make_window_fed_round is deprecated; use "
+                  "repro.api.fed_round", DeprecationWarning, stacklevel=2)
+    return _build_window_fed(model_loss_fn, scfg, abstract, axes_tree,
+                             spmd_axis=spmd_axis,
+                             kernel_backend=kernel_backend)
 
 
 def make_mask_fed_round(model_loss_fn, scfg: SubmodelConfig, abstract,
                         axes_tree, capacities,
                         kernel_backend=None) -> MaskFedAvg:
-    return MaskFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
-                      axes_tree=axes_tree,
-                      capacities=jnp.asarray(capacities, jnp.float32),
-                      kernel_backend=kernel_backend)
+    """Deprecated: use ``repro.api.fed_round(model, scfg, mode="mask")``."""
+    warnings.warn("make_mask_fed_round is deprecated; use "
+                  "repro.api.fed_round", DeprecationWarning, stacklevel=2)
+    return _build_mask_fed(model_loss_fn, scfg, abstract, axes_tree,
+                           capacities, kernel_backend=kernel_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +460,13 @@ def make_mask_fed_round(model_loss_fn, scfg: SubmodelConfig, abstract,
 
 
 def output_model(fed, params, batch, rng, lipschitz=1.0, round_idx=0):
-    """hat-w = P_W(w - (1/L) avg_i m_i ⊙ grad f_i(m_i ⊙ w))  (Alg. 1/2 output)."""
+    """hat-w = P_W(w - (1/L) avg_i m_i ⊙ grad f_i(m_i ⊙ w))  (Alg. 1/2 output).
+
+    Works in both modes: mask mode evaluates the literal dense-mask formula;
+    window mode evaluates the same quantity in compact form (gradient on the
+    extracted sub-model, scattered back — the two agree because slicing is
+    linear, property-tested in tests/test_api.py).
+    """
     scfg = fed.scfg
     if isinstance(fed, MaskFedAvg):
         masks = dense_client_masks(rng, fed.abstract, fed.axes_tree, scfg,
@@ -362,27 +481,32 @@ def output_model(fed, params, batch, rng, lipschitz=1.0, round_idx=0):
         new = jax.tree_util.tree_map(
             lambda w, d: w - d.astype(w.dtype) / lipschitz, params, gbar)
         return sm.project_l2(new, scfg.proj_radius)
-    raise NotImplementedError("output_model is used by the mask-mode "
-                              "experiments")
+
+    # Window mode: one gradient on each client's compact sub-model, scattered
+    # back and averaged — reuses the round's client-extraction and
+    # mean-delta helpers.
+    offsets = fed._client_offsets(params, round_idx, rng)
+    sub0 = fed._extract_clients(params, offsets)
+    mb = jax.tree_util.tree_map(lambda x: x[0], batch)
+    (_, _), g = fed._vmap(
+        jax.value_and_grad(fed.loss_fn, has_aux=True))(sub0, mb)
+    gbar = fed._mean_delta_full(params, g, offsets)
+    new = jax.tree_util.tree_map(
+        lambda w, d: w - d.astype(w.dtype) / lipschitz, params, gbar)
+    return sm.project_l2(new, scfg.proj_radius)
 
 
 # ---------------------------------------------------------------------------
-# Training-loop driver (python loop over jitted rounds)
+# Training-loop driver (superseded by repro.core.trainer.Trainer)
 # ---------------------------------------------------------------------------
 
 
 def run_rounds(fed, params, batch_iter, n_rounds, rng, jit=True,
                callback=None):
-    step = fed.round
-    if jit:
-        step = jax.jit(step, static_argnames=())
-    history = []
-    for r in range(n_rounds):
-        rng, sub = jax.random.split(rng)
-        batch = next(batch_iter)
-        params, metrics = step(params, batch, r, sub)
-        loss = float(metrics["loss"])
-        history.append(loss)
-        if callback:
-            callback(r, params, metrics)
-    return params, history
+    """Thin wrapper over :class:`repro.core.trainer.Trainer` (kept for the
+    theory/stability harnesses).  Returns ``(params, history)`` where
+    history is the per-round *metrics* record list (``h["loss"]`` etc.)."""
+    from repro.core.trainer import Trainer
+    trainer = Trainer(fed, params, rng=rng, jit=jit,
+                      callbacks=(callback,) if callback else ())
+    return trainer.run(batch_iter, n_rounds)

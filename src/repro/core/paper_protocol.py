@@ -16,9 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs.base import SubmodelConfig
 from repro.configs.resnet18_cifar import ResNetConfig, reduced as resnet_reduced
-from repro.core.fedavg import MaskFedAvg, make_mask_fed_round
+from repro.core.fedavg import MaskFedAvg
 from repro.core.stability import generalization_gap
 from repro.data.federated import FederatedDataset, label_limited_partition
 from repro.data.synthetic import SyntheticCIFAR
@@ -77,19 +78,15 @@ class PaperExperiment:
                               axes=("channels",))
         caps = np.full(self.participate, uniform_cap, np.float32) \
             if uniform_cap else self.client_caps[:self.participate]
-        return make_mask_fed_round(self.loss_fn, scfg, abstract, axes, caps)
+        return api.fed_round((self.loss_fn, abstract, axes), scfg,
+                             mode="mask", capacities=caps)
 
-    def run(self, scheme: str, rounds: int = 30, uniform_cap=None,
-            eval_every: int = 5) -> Dict:
-        params, _ = self.init_params()
-        fed = self.make_fed(scheme, uniform_cap)
-        step = jax.jit(fed.round)
-        rng = jax.random.PRNGKey(self.seed + 1)
-        test = {k: jnp.asarray(v) for k, v in self.data.test.items()}
-        curve: List[Dict] = []
+    def _round_batches(self, scheme, uniform_cap):
+        """(batch, round_kwargs) pairs: per-round participating capacities
+        ride along as the mask round's ``capacities`` argument."""
         it = self.fed_data.round_batches(self.participate, self.k_steps,
                                          self.mb)
-        for r in range(rounds):
+        while True:
             batch_np, clients = next(it)
             caps = (np.full(self.participate, uniform_cap, np.float32)
                     if uniform_cap else
@@ -97,16 +94,27 @@ class PaperExperiment:
             if scheme in ("rolling", "static", "random"):
                 scaler = (1.0 / caps)[None].repeat(self.k_steps, 0)
                 batch_np["scaler"] = scaler.astype(np.float32)
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            rng, sub = jax.random.split(rng)
-            params, metrics = step(params, batch, r, sub,
-                                   jnp.asarray(caps))
-            if r % eval_every == 0 or r == rounds - 1:
-                lt, mt = self.loss_fn(params, test)
-                curve.append({"round": r,
-                              "train_loss": float(metrics["loss"]),
-                              "test_loss": float(lt),
-                              "test_acc": float(mt["acc"])})
+            yield batch_np, {"capacities": jnp.asarray(caps)}
+
+    def run(self, scheme: str, rounds: int = 30, uniform_cap=None,
+            eval_every: int = 5) -> Dict:
+        params, _ = self.init_params()
+        fed = self.make_fed(scheme, uniform_cap)
+        test = {k: jnp.asarray(v) for k, v in self.data.test.items()}
+
+        def eval_fn(p):
+            lt, mt = self.loss_fn(p, test)
+            return {"test_loss": float(lt), "test_acc": float(mt["acc"])}
+
+        trainer = api.Trainer(fed, params,
+                              rng=jax.random.PRNGKey(self.seed + 1),
+                              eval_fn=eval_fn, eval_every=eval_every)
+        params, history = trainer.run(
+            self._round_batches(scheme, uniform_cap), rounds)
+        curve: List[Dict] = [
+            {"round": h["round"], "train_loss": h["loss"],
+             "test_loss": h["test_loss"], "test_acc": h["test_acc"]}
+            for h in history if "test_loss" in h]
         # §5.3 generalization gap: global model on local-train vs test data
         ntr = min(self.n_test, self.n_train)
         train_eval = {k: jnp.asarray(v[:ntr])

@@ -36,8 +36,11 @@ def masked_value_and_grad(loss_fn, has_aux=True):
 
 
 def masked_sgd_step(params, masks, grads, lr):
+    # grads cast to the param dtype (like every other dispatch arm) so
+    # f32 optimizer state (e.g. client momentum) can't widen the params.
     return jax.tree_util.tree_map(
-        lambda p, m, g: p - lr * m.astype(p.dtype) * g, params, masks, grads)
+        lambda p, m, g: p - lr * m.astype(p.dtype) * g.astype(p.dtype),
+        params, masks, grads)
 
 
 def fillin_average(server, client_params, masks):

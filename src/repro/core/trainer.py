@@ -1,0 +1,140 @@
+"""The single training loop over jitted fed rounds.
+
+Every entry point (launch/train, paper_protocol, benchmarks, examples) used
+to re-roll its own ``for r in range(rounds)`` loop; :class:`Trainer` owns
+that loop once: rng splitting, the jitted step (plain round or the
+server-optimizer round when one is attached), per-round metrics history,
+eval / logging / checkpoint callbacks, and ``--rounds`` pacing with resume
+(``trainer.run`` can be called repeatedly; ``round_idx`` persists).
+
+Batch iterators yield either a batch dict (leaves [K, C, ...]) or a
+``(batch, round_kwargs)`` pair — the kwargs are forwarded to the round
+(e.g. mask mode's per-round ``capacities``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def _record(round_idx, metrics) -> Dict[str, Any]:
+    """Per-round history record: scalars as floats; array metrics (e.g. the
+    [K, C] per-client losses) stay device arrays — no forced host sync."""
+    rec = {"round": round_idx}
+    for k, v in metrics.items():
+        rec[k] = float(v) if np.ndim(v) == 0 else v
+    return rec
+
+
+@dataclass
+class Trainer:
+    """Drives ``fed.round`` (or ``fed.round_with_server_opt``) for N rounds.
+
+    Callbacks run after each round as ``cb(round_idx, params, record)`` where
+    ``record`` is the metrics dict appended to ``history`` (eval metrics
+    merged in on eval rounds).
+    """
+
+    fed: Any                              # WindowFedAvg | MaskFedAvg
+    params: Any
+    rng: Any = None                       # PRNGKey (int seeds accepted)
+    server_opt: Any = None                # overrides fed.server_opt
+    jit: bool = True
+    callbacks: Sequence[Callable] = ()
+    eval_fn: Optional[Callable] = None    # (params) -> {name: scalar}
+    eval_every: int = 0                   # 0 = never (eval_fn still runs last)
+    log_every: int = 0                    # 0 = silent
+    log_fn: Callable = print
+    start_round: int = 0                  # resume mid-schedule (checkpoints)
+
+    round_idx: int = field(default=0, init=False)
+    history: List[Dict] = field(default_factory=list, init=False)
+    opt_state: Any = field(default=None, init=False)
+    _step: Any = field(default=None, init=False)
+
+    def __post_init__(self):
+        self.round_idx = self.start_round
+        if self.rng is None:
+            self.rng = jax.random.PRNGKey(0)
+        elif isinstance(self.rng, int):
+            self.rng = jax.random.PRNGKey(self.rng)
+        if self.server_opt is None:
+            self.server_opt = getattr(self.fed, "server_opt", None)
+        if self.server_opt is not None:
+            self.opt_state = self.server_opt.init(
+                getattr(self.fed, "abstract", None) or self.params)
+
+        if self.server_opt is None:
+            step = self.fed.round
+        else:
+            def step(params, opt_state, batch, round_idx, rng, **kw):
+                return self.fed.round_with_server_opt(
+                    params, opt_state, batch, round_idx, self.server_opt,
+                    rng=rng, **kw)
+        self._step = jax.jit(step) if self.jit else step
+
+    def step(self, batch, round_kwargs=None):
+        """Run exactly one round on ``batch``; returns the history record."""
+        r, kw = self.round_idx, dict(round_kwargs or {})
+        self.rng, sub = jax.random.split(self.rng)
+        if isinstance(batch, dict):
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        if self.server_opt is None:
+            self.params, metrics = self._step(self.params, batch, r, sub,
+                                              **kw)
+        else:
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch, r, sub, **kw)
+        rec = _record(r, metrics)
+        self.round_idx += 1
+        return rec
+
+    def run(self, batch_iter, n_rounds):
+        """Train for ``n_rounds``; returns ``(params, history)``."""
+        batch_iter = iter(batch_iter)
+        last = self.round_idx + n_rounds - 1
+        for _ in range(n_rounds):
+            item = next(batch_iter)
+            batch, kw = item if isinstance(item, tuple) else (item, None)
+            rec = self.step(batch, kw)
+            r = rec["round"]
+            if self.eval_fn and (r == last or (
+                    self.eval_every and r % self.eval_every == 0)):
+                rec.update({k: float(v) for k, v in
+                            self.eval_fn(self.params).items()})
+            self.history.append(rec)
+            for cb in self.callbacks:
+                cb(r, self.params, rec)
+            if self.log_every and (r % self.log_every == 0 or r == last):
+                extras = " ".join(f"{k} {v:.4f}" for k, v in rec.items()
+                                  if k not in ("round", "loss")
+                                  and np.ndim(v) == 0)
+                self.log_fn(f"round {r:4d} loss {rec['loss']:.4f}"
+                            + (f"  {extras}" if extras else ""))
+        return self.params, self.history
+
+    @property
+    def losses(self) -> List[float]:
+        return [h["loss"] for h in self.history]
+
+
+def checkpoint_callback(path, every=0, meta=None):
+    """Trainer callback that checkpoints params (+ running loss history).
+
+    ``every=0`` saves on every call (use with small round counts or pair
+    with ``every=N`` for periodic saves).
+    """
+    losses: List[float] = []
+
+    def cb(round_idx, params, record):
+        from repro.checkpoint.checkpoint import save
+        losses.append(record["loss"])
+        if every and round_idx % every != 0:
+            return
+        save(path, params, {**(meta or {}), "round": round_idx + 1,
+                            "history": losses})
+
+    return cb

@@ -22,10 +22,10 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.analysis.hlo_cost import analyze
 from repro.analysis.roofline import Roofline, model_flops
 from repro.configs.base import INPUT_SHAPES, list_archs
-from repro.core.fedavg import make_window_fed_round
 from repro.launch.specs import make_plan
 from repro.sharding.ctx import activation_policy
 
@@ -37,9 +37,8 @@ def step_fn(plan):
         spmd_axis = None
         if spmd:  # perf-iteration knob: pin client vmap to the data axis
             spmd_axis = ("pod", "data") if plan.multi_pod else "data"
-        fed = make_window_fed_round(model.loss, plan.scfg,
-                                    model.abstract_params(), model.axes(),
-                                    spmd_axis=spmd_axis)
+        fed = api.fed_round(model, plan.scfg, mode="window",
+                            spmd_axis=spmd_axis)
 
         def train_step(params, batch, round_idx, rng):
             return fed.round(params, batch, round_idx, rng)

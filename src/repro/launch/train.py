@@ -1,9 +1,10 @@
 """Training launcher — distributed sub-model training (the paper's
-algorithms) on real devices.
+algorithms) on real devices, through the ``repro.api`` facade.
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
         --reduced --rounds 50 --scheme rolling --capacity 0.5 \
-        [--clients 4 --local-steps 2 --mb 2 --seq 128]
+        [--clients 4 --local-steps 2 --mb 2 --seq 128] \
+        [--client-opt momentum --server-opt adam]
 
 On this CPU container use --reduced (smoke-scale config); on a TPU slice the
 same entry point drives the full config over the production mesh.
@@ -16,12 +17,10 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+from repro import api
 from repro.checkpoint.checkpoint import save as ckpt_save
 from repro.configs.base import SubmodelConfig, get_config, get_reduced_config
-from repro.core.fedavg import make_mask_fed_round, make_window_fed_round
 from repro.data.synthetic import lm_batches
 from repro.models import build_model
 
@@ -33,12 +32,29 @@ def main():
     ap.add_argument("--scheme", default="rolling",
                     choices=["rolling", "random", "static", "full",
                              "bernoulli", "importance"])
-    ap.add_argument("--mode", default="window", choices=["window", "mask"])
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "window", "mask"],
+                    help="round form: auto derives it from the scheme "
+                         "(bernoulli -> mask, else window)")
     ap.add_argument("--kernel-backend", default=None,
                     choices=["auto", "pallas", "jnp"],
                     help="fed-round kernel arm: fused Pallas kernels, jnp "
                          "oracles, or auto (Pallas iff on TPU). Default: "
                          "the REPRO_KERNEL_BACKEND env var, else auto")
+    ap.add_argument("--client-opt", default="sgd",
+                    choices=sorted(api.CLIENT_OPTS),
+                    help="local-step optimizer (paper: sgd)")
+    ap.add_argument("--server-opt", default="none",
+                    choices=["none"] + sorted(api.SERVER_OPTS),
+                    help="stateful server optimizer on the mean delta "
+                         "(paper: none = plain averaging)")
+    # The env var is only a default here (baseline-repro knob); the round
+    # itself reads SubmodelConfig.shared_window, resolved at construction.
+    ap.add_argument("--no-shared-window", action="store_true",
+                    default=bool(os.environ.get("REPRO_NO_SHARED_WINDOW")),
+                    help="force the per-client scatter aggregation even "
+                         "when every client trains the same window "
+                         "(default: the REPRO_NO_SHARED_WINDOW env var)")
     ap.add_argument("--capacity", type=float, default=0.5)
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=4)
@@ -59,40 +75,33 @@ def main():
     scfg = SubmodelConfig(scheme=args.scheme, capacity=args.capacity,
                           local_steps=args.local_steps,
                           clients_per_round=args.clients,
-                          client_lr=args.lr, seed=args.seed)
-    abstract = model.abstract_params()
-    axes = model.axes()
-    if args.mode == "window" and args.scheme != "bernoulli":
-        fed = make_window_fed_round(model.loss, scfg, abstract, axes,
-                                    kernel_backend=args.kernel_backend)
-    else:
-        fed = make_mask_fed_round(model.loss, scfg, abstract, axes,
-                                  np.full(args.clients, args.capacity),
-                                  kernel_backend=args.kernel_backend)
+                          client_lr=args.lr, seed=args.seed,
+                          shared_window=False if args.no_shared_window
+                          else None)
+    fed = api.fed_round(model, scfg, mode=args.mode,
+                        client_opt=args.client_opt,
+                        server_opt=args.server_opt,
+                        kernel_backend=args.kernel_backend)
 
     vision = (cfg.vision_patches, cfg.vision_d) if cfg.vision_stub else None
     it = lm_batches(cfg.vocab, (args.local_steps, args.clients, args.mb),
                     args.seq, seed=args.seed, codebooks=cfg.n_codebooks,
                     vision=vision)
-    step = jax.jit(fed.round)
-    rng = jax.random.PRNGKey(args.seed + 1)
     t0 = time.time()
-    history = []
-    for r in range(args.rounds):
-        rng, sub = jax.random.split(rng)
-        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-        params, metrics = step(params, batch, r, sub)
-        loss = float(metrics["loss"])
-        history.append(loss)
-        if r % args.log_every == 0 or r == args.rounds - 1:
-            print(f"round {r:4d} loss {loss:.4f} "
-                  f"({(time.time()-t0)/(r+1):.2f}s/round)", flush=True)
+    trainer = api.Trainer(
+        fed, params, rng=jax.random.PRNGKey(args.seed + 1),
+        log_every=args.log_every,
+        log_fn=lambda s: print(
+            f"{s} ({(time.time() - t0) / (trainer.round_idx or 1):.2f}"
+            "s/round)", flush=True))
+    params, history = trainer.run(it, args.rounds)
+    losses = [h["loss"] for h in history]
     if args.ckpt:
         ckpt_save(args.ckpt, params,
                   {"arch": args.arch, "rounds": args.rounds,
-                   "scheme": args.scheme, "history": history})
+                   "scheme": args.scheme, "history": losses})
         print("checkpoint ->", args.ckpt)
-    print(json.dumps({"first_loss": history[0], "last_loss": history[-1]}))
+    print(json.dumps({"first_loss": losses[0], "last_loss": losses[-1]}))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,328 @@
+"""The ``repro.api`` facade: mode selection, shim equivalence, pluggable
+client/server optimizers, the Trainer loop, and the window-mode hat-w
+output against the mask-mode oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import SubmodelConfig
+from repro.core.fedavg import (make_mask_fed_round, make_window_fed_round,
+                               resolve_shared_window)
+
+
+def _small_problem(d_h=32):
+    """Tiny MLP regression; d_h=32 keeps window and dense-mask offsets
+    identical for capacities 0.5/0.25 (even partitions)."""
+    d_in, C, K = 24, 4, 2
+    k = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(k, (d_in, d_h)) * 0.3,
+              "b1": jnp.zeros((d_h,)),
+              "w2": jax.random.normal(jax.random.fold_in(k, 1), (d_h,)) * 0.3}
+    ab = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    axes = {"w1": ("d_model", "d_ff"), "b1": ("d_ff",), "w2": ("d_ff",)}
+
+    def loss(w, b):
+        h = jnp.tanh(b["x"] @ w["w1"] + w["b1"])
+        r = h @ w["w2"] - b["y"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.standard_normal((K, C, 8, d_in)),
+                              jnp.float32),
+             "y": jnp.asarray(rng.standard_normal((K, C, 8)), jnp.float32)}
+    return params, ab, axes, loss, batch, C, K
+
+
+def _scfg(scheme, **kw):
+    kw.setdefault("capacity", 0.5)
+    kw.setdefault("local_steps", 2)
+    kw.setdefault("clients_per_round", 4)
+    kw.setdefault("client_lr", 0.05)
+    kw.setdefault("axes", ("d_ff",))
+    return SubmodelConfig(scheme=scheme, **kw)
+
+
+def _maxdelta(t1, t2):
+    return max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(t1), jax.tree_util.tree_leaves(t2)))
+
+
+# -- mode auto-selection matrix ----------------------------------------------
+
+
+@pytest.mark.parametrize("scheme,mode,want", [
+    ("rolling", "auto", api.WindowFedAvg),
+    ("static", "auto", api.WindowFedAvg),
+    ("random", "auto", api.WindowFedAvg),
+    ("full", "auto", api.WindowFedAvg),
+    ("importance", "auto", api.WindowFedAvg),
+    ("bernoulli", "auto", api.MaskFedAvg),
+    ("rolling", "mask", api.MaskFedAvg),
+    ("rolling", "window", api.WindowFedAvg),
+])
+def test_mode_selection_matrix(scheme, mode, want):
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    fed = api.fed_round((loss, ab, axes), _scfg(scheme), mode=mode)
+    assert isinstance(fed, want)
+
+
+def test_mode_window_rejects_bernoulli():
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    with pytest.raises(ValueError, match="window"):
+        api.fed_round((loss, ab, axes), _scfg("bernoulli"), mode="window")
+    with pytest.raises(ValueError, match="mode"):
+        api.fed_round((loss, ab, axes), _scfg("rolling"), mode="compact")
+
+
+def test_model_protocol_and_triple_agree():
+    """A model-zoo object and its (loss, abstract, axes) triple build the
+    same round."""
+    from repro.configs.base import get_reduced_config
+    from repro.models import build_model
+    m = build_model(get_reduced_config("tinyllama_1_1b"), remat=False)
+    scfg = _scfg("rolling", axes=("d_ff", "heads", "kv_heads"))
+    f1 = api.fed_round(m, scfg)
+    f2 = api.fed_round((m.loss, m.abstract_params(), m.axes()), scfg)
+    assert f1.scheme.sizes == f2.scheme.sizes
+    with pytest.raises(TypeError, match="model"):
+        api.fed_round(object(), scfg)
+
+
+# -- old shim vs new facade: identical rounds, both kernel backends ----------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_facade_equals_window_shim(backend):
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    scfg = _scfg("rolling")
+    fed = api.fed_round((loss, ab, axes), scfg, kernel_backend=backend)
+    with pytest.warns(DeprecationWarning):
+        shim = make_window_fed_round(loss, scfg, ab, axes,
+                                     kernel_backend=backend)
+    rng = jax.random.PRNGKey(7)
+    new, m = jax.jit(fed.round)(params, batch, 1, rng)
+    old, mo = jax.jit(shim.round)(params, batch, 1, rng)
+    assert _maxdelta(new, old) == 0.0
+    np.testing.assert_allclose(float(m["loss"]), float(mo["loss"]))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_facade_equals_mask_shim(backend):
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    scfg = _scfg("bernoulli")
+    fed = api.fed_round((loss, ab, axes), scfg, kernel_backend=backend)
+    with pytest.warns(DeprecationWarning):
+        shim = make_mask_fed_round(loss, scfg, ab, axes, np.full(C, 0.5),
+                                   kernel_backend=backend)
+    rng = jax.random.PRNGKey(7)
+    new, _ = jax.jit(fed.round)(params, batch, 1, rng)
+    old, _ = jax.jit(shim.round)(params, batch, 1, rng)
+    assert _maxdelta(new, old) == 0.0
+
+
+# -- pluggable client optimizers ---------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["window", "mask"])
+def test_client_momentum_diverges_from_sgd(mode):
+    """Momentum local steps must train (finite, loss moves) and produce
+    different params than plain SGD in both round forms."""
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    scfg = _scfg("rolling")
+    outs = {}
+    for name in ("sgd", "momentum"):
+        fed = api.fed_round((loss, ab, axes), scfg, mode=mode,
+                            client_opt=name)
+        outs[name], m = jax.jit(fed.round)(params, batch, 0,
+                                           jax.random.PRNGKey(3))
+        assert np.isfinite(float(m["loss"]))
+    assert _maxdelta(outs["sgd"], outs["momentum"]) > 1e-7
+
+
+def test_client_proximal_shrinks_drift():
+    """FedProx pulls the local iterates toward the round-start sub-model:
+    a large mu must yield a smaller client delta than plain SGD."""
+    from repro.core.submodel import global_norm
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    scfg = _scfg("rolling", client_lr=0.2)
+    deltas = {}
+    for name, opt in (("sgd", None), ("prox", api.client_proximal(mu=5.0))):
+        fed = api.fed_round((loss, ab, axes), scfg, client_opt=opt)
+        new, _ = jax.jit(fed.round)(params, batch, 0, jax.random.PRNGKey(3))
+        deltas[name] = float(global_norm(jax.tree_util.tree_map(
+            lambda a, b: a - b, new, params)))
+    assert deltas["prox"] < deltas["sgd"]
+
+
+def test_client_opt_default_is_paper_sgd():
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    fed = api.fed_round((loss, ab, axes), _scfg("rolling"))
+    assert fed.client_opt.name == "sgd"
+    with pytest.raises(ValueError, match="client"):
+        api.fed_round((loss, ab, axes), _scfg("rolling"), client_opt="lion")
+
+
+# -- server optimizer through the facade + unified round path ----------------
+
+
+@pytest.mark.parametrize("mode", ["window", "mask"])
+def test_server_opt_round_trains(mode):
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    fed = api.fed_round((loss, ab, axes), _scfg("rolling"), mode=mode,
+                        server_opt="momentum")
+    trainer = api.Trainer(fed, params, rng=1)
+    p2, hist = trainer.run(iter(lambda: batch, None), 4)
+    losses = [h["loss"] for h in hist]
+    assert all(np.isfinite(losses))
+    assert min(losses[1:]) < losses[0]
+
+
+@pytest.mark.parametrize("mode", ["window", "mask"])
+def test_server_sgd_round_matches_plain_averaging(mode):
+    """server_opt="sgd" is built with lr=scfg.server_lr, so it is
+    algebraically the paper's plain-averaging update — including at
+    non-default server learning rates, in both round forms (mask mode's
+    fill-in aggregation honors server_lr too)."""
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    scfg = _scfg("rolling", server_lr=0.5)
+    fed = api.fed_round((loss, ab, axes), scfg, mode=mode)
+    plain, _ = jax.jit(fed.round)(params, batch, 0, jax.random.PRNGKey(5))
+    fed_s = api.fed_round((loss, ab, axes), scfg, mode=mode,
+                          server_opt="sgd")
+    stepped, _, _ = fed_s.round_with_server_opt(
+        params, fed_s.server_opt.init(params), batch, 0,
+        rng=jax.random.PRNGKey(5))
+    assert _maxdelta(plain, stepped) < 1e-6
+
+
+def test_client_momentum_bf16_mask_round():
+    """f32 velocity must not widen non-f32 params through the jnp masked
+    arm (the scan carry dtype must stay stable)."""
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.bfloat16), params)
+    ab = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16), ab)
+    fed = api.fed_round((loss, ab, axes), _scfg("bernoulli"),
+                        client_opt="momentum", kernel_backend="jnp")
+    new, m = jax.jit(fed.round)(params, batch, 0, jax.random.PRNGKey(0))
+    assert np.isfinite(float(m["loss"]))
+    assert all(l.dtype == jnp.bfloat16
+               for l in jax.tree_util.tree_leaves(new))
+
+
+def test_server_opt_round_requires_an_optimizer():
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    for mode in ("window", "mask"):
+        fed = api.fed_round((loss, ab, axes), _scfg("rolling"), mode=mode)
+        with pytest.raises(ValueError, match="server optimizer"):
+            fed.round_with_server_opt(params, (), batch, 0,
+                                      rng=jax.random.PRNGKey(0))
+
+
+# -- shared_window: explicit config field, not an env hack -------------------
+
+
+def test_shared_window_resolution():
+    assert resolve_shared_window(_scfg("rolling")) is True
+    assert resolve_shared_window(_scfg("random")) is False
+    assert resolve_shared_window(_scfg("rolling", stagger=True)) is False
+    assert resolve_shared_window(_scfg("rolling", shared_window=False)) \
+        is False
+    with pytest.raises(ValueError, match="shared_window"):
+        resolve_shared_window(_scfg("random", shared_window=True))
+
+
+def test_shared_window_off_same_params():
+    """The fast path is an optimization: forcing the per-client scatter
+    baseline must give the same round output."""
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    outs = {}
+    for sw in (None, False):
+        fed = api.fed_round((loss, ab, axes),
+                            _scfg("rolling", shared_window=sw))
+        assert fed.shared_window is (sw is None)
+        outs[sw], _ = jax.jit(fed.round)(params, batch, 0,
+                                         jax.random.PRNGKey(2))
+    assert _maxdelta(outs[None], outs[False]) < 1e-6
+
+
+# -- Trainer -----------------------------------------------------------------
+
+
+def test_trainer_smoke_with_checkpoint_callback(tmp_path):
+    from repro.checkpoint.checkpoint import load as ckpt_load
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    path = str(tmp_path / "ck.npz")
+    fed = api.fed_round((loss, ab, axes), _scfg("rolling"))
+    trainer = api.Trainer(
+        fed, params, rng=0,
+        callbacks=(api.checkpoint_callback(path, meta={"arch": "toy"}),))
+    p2, hist = trainer.run(iter(lambda: batch, None), 4)
+    assert trainer.round_idx == 4
+    assert [h["round"] for h in hist] == [0, 1, 2, 3]
+    assert trainer.losses == [h["loss"] for h in hist]
+    assert hist[0]["client_loss"].shape == (K, C)
+    saved, meta = ckpt_load(path)
+    assert meta["arch"] == "toy" and meta["round"] == 4
+    assert len(meta["history"]) == 4
+    assert _maxdelta(saved, p2) == 0.0
+
+
+def test_trainer_eval_and_resume():
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    fed = api.fed_round((loss, ab, axes), _scfg("rolling"))
+    evals = []
+
+    def eval_fn(p):
+        evals.append(1)
+        return {"test_loss": 0.5}
+
+    trainer = api.Trainer(fed, params, rng=0, eval_fn=eval_fn, eval_every=2)
+    trainer.run(iter(lambda: batch, None), 3)      # evals at r=0, 2 (last)
+    assert [h["round"] for h in trainer.history if "test_loss" in h] == [0, 2]
+    trainer.run(iter(lambda: batch, None), 2)      # resumes at r=3, 4
+    assert [h["round"] for h in trainer.history] == [0, 1, 2, 3, 4]
+    assert "test_loss" in trainer.history[-1]      # last-round eval
+    # checkpoint-style resume: a fresh Trainer picks up mid-schedule
+    t2 = api.Trainer(fed, trainer.params, rng=0, start_round=5)
+    t2.run(iter(lambda: batch, None), 2)
+    assert [h["round"] for h in t2.history] == [5, 6]
+
+
+def test_run_rounds_is_trainer_wrapper():
+    """run_rounds returns the metrics history (not bare loss floats)."""
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    fed = api.fed_round((loss, ab, axes), _scfg("rolling"))
+    seen = []
+    p2, hist = api.run_rounds(fed, params, iter(lambda: batch, None), 3,
+                              jax.random.PRNGKey(1),
+                              callback=lambda r, p, rec: seen.append(r))
+    assert seen == [0, 1, 2]
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert {"round", "loss", "client_loss"} <= set(hist[0])
+
+
+# -- output_model: window mode vs the mask-mode oracle -----------------------
+
+
+@pytest.mark.parametrize("scheme", ["rolling", "static"])
+@pytest.mark.parametrize("capacity", [0.5, 0.25])
+@pytest.mark.parametrize("round_idx", [0, 1, 3])
+def test_output_model_window_equals_mask_oracle(scheme, capacity, round_idx):
+    """hat-w (Alg. 1/2 output): the compact window evaluation must equal
+    the dense-mask formula whenever the masks are the window indicators."""
+    params, ab, axes, loss, batch, C, K = _small_problem()
+    scfg = _scfg(scheme, capacity=capacity, proj_radius=3.0)
+    fedw = api.fed_round((loss, ab, axes), scfg, mode="window")
+    fedm = api.fed_round((loss, ab, axes), scfg, mode="mask")
+    rng = jax.random.PRNGKey(11)
+    hat_w = api.output_model(fedw, params, batch, rng, lipschitz=2.0,
+                             round_idx=round_idx)
+    hat_m = api.output_model(fedm, params, batch, rng, lipschitz=2.0,
+                             round_idx=round_idx)
+    assert _maxdelta(hat_w, hat_m) < 1e-6
+    assert _maxdelta(hat_w, params) > 1e-7   # the correction moved w
