@@ -368,6 +368,75 @@ def fed_round_pallas(rounds):
          + dispatch.resolve_backend())
 
 
+def fed_round_fused(rounds):
+    """Fused rolling-window client phase vs the extract-based round on one
+    transformer: the two must be bitwise-equal on f32, the fused arm must
+    not be slower, and the fused client phase must materialize no stacked
+    per-client W_sub copy (checked in the compiled HLO)."""
+    import jax
+    import jax.numpy as jnp
+    from dataclasses import replace
+    from repro import api
+    from repro.configs.base import SubmodelConfig, get_reduced_config
+    from repro.data.synthetic import lm_batches
+    from repro.models import build_model
+
+    cfg = replace(get_reduced_config("tinyllama_1_1b"), n_layers=2)
+    m = build_model(cfg, remat=False)
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.05,
+                          axes=("d_ff",))
+    feds = {"fused": api.fed_round(m, scfg, fused_forward="on"),
+            "extract": api.fed_round(m, scfg, fused_forward="off")}
+    it = lm_batches(cfg.vocab, (2, 4, 2), 64)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+
+    outs, times = {}, {}
+    for name, fed in feds.items():
+        step = jax.jit(fed.round)
+        new, _ = step(params, batch, 0, jax.random.PRNGKey(1))  # compile
+        jax.block_until_ready(jax.tree_util.tree_leaves(new)[0])
+        t0 = time.time()
+        n = 3
+        for r in range(n):
+            new, _ = step(params, batch, 0, jax.random.PRNGKey(1))
+        jax.block_until_ready(jax.tree_util.tree_leaves(new)[0])
+        outs[name] = new
+        times[name] = (time.time() - t0) / n * 1e3
+        emit("fed_round_fused", f"{name}_round_ms", round(times[name], 1))
+
+    maxdelta = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(outs["fused"]),
+        jax.tree_util.tree_leaves(outs["extract"])))
+    emit("fed_round_fused", "round_maxdelta", f"{maxdelta:.2e}")
+    emit("fed_round_fused", "round_bitwise_equal", int(maxdelta == 0.0))
+    emit("fed_round_fused", "extract_over_fused_speedup",
+         round(times["extract"] / times["fused"], 3))
+
+    # Client-phase HLO: the extract arm stacks per-client compact W_sub
+    # copies [C, L, D, win]; the fused arm reads the window in place and
+    # must allocate none.
+    C, L, D = scfg.clients_per_round, cfg.n_layers, cfg.d_model
+    win = feds["fused"].scheme.sizes[feds["fused"]._fused_key]
+    sub_shape = f"f32[{C},{L},{D},{win}]"
+
+    def client_hlo(fed, fused):
+        def f(p, b, rng):
+            offsets = fed._client_offsets(p, 0, rng)
+            phase = (fed._client_phase_fused if fused
+                     else fed._client_phase)
+            return phase(p, b, offsets)[1]
+        return jax.jit(f).lower(params, batch,
+                                jax.random.PRNGKey(1)).compile().as_text()
+
+    n_extract = client_hlo(feds["extract"], False).count(sub_shape)
+    n_fused = client_hlo(feds["fused"], True).count(sub_shape)
+    emit("fed_round_fused", "extract_client_wsub_stacks", n_extract)
+    emit("fed_round_fused", "fused_client_wsub_stacks", n_fused)
+    emit("fed_round_fused", "fused_no_wsub_alloc", int(n_fused == 0))
+
+
 def roofline(rounds):
     files = sorted(glob.glob("experiments/dryrun/*.json"))
     if not files:
@@ -392,6 +461,7 @@ BENCHES = {
     "kernels": kernels,
     "fed_round": fed_round,
     "fed_round_pallas": fed_round_pallas,
+    "fed_round_fused": fed_round_fused,
     "roofline": roofline,
 }
 

@@ -24,6 +24,7 @@ Deprecated constructors (kept as shims): ``make_window_fed_round`` /
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Optional, Tuple
 
 import numpy as np
@@ -72,6 +73,19 @@ def _model_parts(model) -> Tuple[Any, Any, Any]:
         f"axes_tree) triple; got {type(model).__name__}")
 
 
+def _windowed_loss(loss_fn):
+    """``loss_fn`` itself when it is window-aware (accepts a ``window=``
+    kwarg, like the model zoo's ``Model.loss``), else None — the fused
+    rolling-window arm is only offered where it exists.  Works for both
+    model-zoo objects and raw ``(loss_fn, abstract, axes)`` triples."""
+    try:
+        if "window" in inspect.signature(loss_fn).parameters:
+            return loss_fn
+    except (TypeError, ValueError):
+        pass
+    return None
+
+
 def _resolve_server_opt(server_opt, scfg: SubmodelConfig) \
         -> Optional[ServerOpt]:
     if server_opt is None or isinstance(server_opt, str) and \
@@ -93,7 +107,7 @@ def _resolve_server_opt(server_opt, scfg: SubmodelConfig) \
 def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
               client_opt=None, server_opt=None,
               kernel_backend: Optional[str] = None, spmd_axis=None,
-              capacities=None):
+              capacities=None, fused_forward="auto"):
     """Build one federated sub-model round (Algorithms 1 & 2).
 
     Args:
@@ -115,6 +129,15 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
       spmd_axis: mesh axis pinning the client vmap (window mode only).
       capacities: mask mode only — per-client ``[C]`` fractions; defaults
         to ``scfg.capacity`` for every client.
+      fused_forward: window mode only — ``"auto"`` (default) routes the
+        client phase through the fused rolling-window forward (no
+        extract/scatter, no W_sub copy; the model's MLP stack reads only
+        the active d_ff window from HBM) whenever the model exposes a
+        window-aware ``loss(params, batch, window=...)``, the scheme
+        shares one window across clients, and only ``d_ff`` is windowed.
+        ``"on"``/True forces it (error when unavailable), ``"off"``/False
+        keeps the extract-based client phase.  Fused and extract rounds
+        are bitwise-equal on f32 (property-tested).
 
     Returns a :class:`WindowFedAvg` or :class:`MaskFedAvg` whose ``round``
     signature is identical across modes (mask mode additionally accepts
@@ -132,9 +155,14 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
                                  spmd_axis=spmd_axis,
                                  kernel_backend=kernel_backend,
                                  client_opt=client_opt,
-                                 server_opt=server_opt)
+                                 server_opt=server_opt,
+                                 windowed_loss_fn=_windowed_loss(loss_fn),
+                                 fused_forward=fused_forward)
     if spmd_axis is not None:
         raise ValueError("spmd_axis applies to window mode only")
+    if fused_forward in (True, "on"):
+        raise ValueError("fused_forward applies to window mode only "
+                         "(mask mode is the dense-mask oracle)")
     if capacities is None:
         capacities = np.full(scfg.clients_per_round, scfg.capacity,
                              np.float32)

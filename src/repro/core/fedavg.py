@@ -85,11 +85,56 @@ class WindowFedAvg:
     client_opt: Optional[ClientOpt] = None  # None = the paper's plain SGD
     server_opt: Any = None              # ServerOpt used by Trainer (optional)
     shared_window: Optional[bool] = None  # None = resolve from scfg
+    # Fused rolling-window forward: clients skip extract/scatter entirely
+    # and run K steps on the FULL tree through a window-aware model forward
+    # (loss_fn(params, batch, window=(offset, win))).  "auto" takes the
+    # fused arm whenever a windowed loss is attached, the scheme shares a
+    # window, and exactly one proper d_ff window is in play.
+    windowed_loss_fn: Optional[Callable] = None
+    fused_forward: Any = "auto"         # "auto" | True/"on" | False/"off"
 
     def __post_init__(self):
         if self.shared_window is None:
             self.shared_window = resolve_shared_window(self.scfg)
         self.client_opt = resolve_client_opt(self.client_opt)
+        self.use_fused = self._resolve_fused()
+
+    def _resolve_fused(self) -> bool:
+        want = self.fused_forward
+        if want in (False, "off"):
+            return False
+        if want not in (True, "on", "auto", None):
+            raise ValueError(
+                f"fused_forward must be 'auto', 'on'/True or 'off'/False; "
+                f"got {want!r}")
+        keys = list(self.scheme.sizes)
+        reasons = []
+        if self.windowed_loss_fn is None:
+            reasons.append("the model exposes no windowed forward "
+                           "(loss(params, batch, window=...))")
+        if not self.shared_window:
+            reasons.append("the scheme does not share one window across "
+                           "clients")
+        if not (len(keys) == 1 and keys[0][0] == "d_ff"
+                and self.scheme.sizes[keys[0]] < keys[0][1]):
+            reasons.append("the windowed axes are not exactly one proper "
+                           f"d_ff window (got {keys})")
+        if reasons:
+            if want in (True, "on"):
+                raise ValueError("fused_forward=True requires: "
+                                 + "; ".join(reasons))
+            return False
+        key = keys[0]
+        win = self.scheme.sizes[key]
+        # A traced offset may take the fused Pallas arm only when every
+        # offset the scheme can produce lands on the kernel block boundary
+        # (the exact-tail grid entry breaks this when (n - w) % block != 0).
+        block = min(128, win)
+        self._fused_key = key
+        self._fused_assume_aligned = (
+            True if self.scfg.scheme == "static"
+            else self.scheme.grid_aligned(key, block))
+        return True
 
     def _vmap(self, f, **kw):
         if self.spmd_axis is not None:
@@ -141,6 +186,44 @@ class WindowFedAvg:
             subK, sub0)
         return sub0, delta, losses
 
+    def _client_phase_fused(self, params, batch, offsets):
+        """Fused rolling-window client phase: K steps on the FULL tree.
+
+        No ``extract``/``scatter_delta`` and no compact W_sub copy: the
+        model's window-aware forward (``mlp_apply_rolling`` through the
+        ``dispatch.rolling_matmul`` custom VJP) reads only the active d_ff
+        window from HBM, and out-of-window coordinates see an exactly-zero
+        gradient, so their K-step delta is exactly 0.  Returns the
+        FULL-shaped f32 delta (consumed by the ``*_fused`` aggregations).
+        """
+        c = self.scfg
+        C = c.clients_per_round
+        key = self._fused_key
+        window = (offsets[key][0], self.scheme.sizes[key],
+                  self.kernel_backend, self._fused_assume_aligned)
+        full0 = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
+        full0 = constrain_tree(full0, self.axes_tree)
+        wloss = self.windowed_loss_fn
+        grad_fn = jax.value_and_grad(
+            lambda p, mb: wloss(p, mb, window=window), has_aux=True)
+        opt = self.client_opt
+
+        def kstep(carry, mb):
+            p, ost = carry
+            (loss, metrics), g = self._vmap(grad_fn)(p, mb)
+            p, ost = opt.update(p, g, ost, c.client_lr,
+                                backend=self.kernel_backend)
+            p = constrain_tree(p, self.axes_tree)
+            return (p, ost), loss
+
+        (fullK, _), losses = jax.lax.scan(kstep, (full0, opt.init(full0)),
+                                          batch)
+        delta_full = jax.tree_util.tree_map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            fullK, full0)
+        return full0, delta_full, losses
+
     def _apply_mean_delta(self, params, delta, offsets):
         """Plain averaging (the paper's fill-in update, delta form)."""
         c = self.scfg
@@ -171,6 +254,27 @@ class WindowFedAvg:
         return jax.tree_util.tree_map(
             lambda w, d: (w + c.server_lr * d.astype(jnp.float32) / C
                           ).astype(w.dtype), params, acc)
+
+    def _apply_mean_delta_fused(self, params, delta_full, offsets):
+        """Aggregation for the fused client phase's FULL-shaped delta.
+
+        Out-of-window coordinates of the fused delta are exactly 0, so the
+        client mean commutes with the window slice: average first, slice the
+        shared window once, then the same single in-place scatter as the
+        extract path — bitwise the extract round's aggregation on f32."""
+        off0 = {k: v[0] for k, v in offsets.items()}
+        dbar_full = jax.tree_util.tree_map(
+            lambda d: jnp.mean(d.astype(jnp.float32), axis=0), delta_full)
+        dbar = ex.extract(dbar_full, self.axes_tree, off0, self.scheme.sizes)
+        return _scatter_update(params, dbar, self.abstract, self.axes_tree,
+                               off0, self.scheme.sizes, self.scfg.server_lr)
+
+    def _mean_delta_full_fused(self, delta_full):
+        """Server pseudo-gradient from the fused phase: already full-shaped
+        with exact zeros outside the window — the mean IS the scattered mean
+        of the extract path."""
+        return jax.tree_util.tree_map(
+            lambda d: jnp.mean(d.astype(jnp.float32), axis=0), delta_full)
 
     def _mean_delta_full(self, params, delta, offsets):
         """Full-shaped f32 mean client delta (the server pseudo-gradient).
@@ -211,8 +315,13 @@ class WindowFedAvg:
     def round(self, params, batch, round_idx, rng=None):
         """One communication round.  batch leaves: [K, C, ...]."""
         offsets = self._client_offsets(params, round_idx, rng)
-        _, delta, losses = self._client_phase(params, batch, offsets)
-        new = self._apply_mean_delta(params, delta, offsets)
+        if self.use_fused and offsets:
+            _, delta_full, losses = self._client_phase_fused(params, batch,
+                                                             offsets)
+            new = self._apply_mean_delta_fused(params, delta_full, offsets)
+        else:
+            _, delta, losses = self._client_phase(params, batch, offsets)
+            new = self._apply_mean_delta(params, delta, offsets)
         new = sm.project_l2(new, self.scfg.proj_radius)
         return new, {"loss": losses.mean(), "client_loss": losses}
 
@@ -232,8 +341,13 @@ class WindowFedAvg:
                 "no server optimizer attached; pass server_opt= or build "
                 "the round with api.fed_round(..., server_opt=...)")
         offsets = self._client_offsets(params, round_idx, rng)
-        _, delta, losses = self._client_phase(params, batch, offsets)
-        full_delta = self._mean_delta_full(params, delta, offsets)
+        if self.use_fused and offsets:
+            _, delta_full, losses = self._client_phase_fused(params, batch,
+                                                             offsets)
+            full_delta = self._mean_delta_full_fused(delta_full)
+        else:
+            _, delta, losses = self._client_phase(params, batch, offsets)
+            full_delta = self._mean_delta_full(params, delta, offsets)
         new, opt_state = server_opt.update(params, full_delta, opt_state)
         new = sm.project_l2(new, self.scfg.proj_radius)
         return new, opt_state, {"loss": losses.mean(), "client_loss": losses}
@@ -292,6 +406,13 @@ def dense_client_masks(rng, abstract, axes_tree, scfg: SubmodelConfig,
     dims = windowed_dims or collect_axis_dims(abstract, axes_tree)
     keys = {k: i for i, k in enumerate(sorted(
         [d for d in dims if d[0] in scfg.axes]))}
+    # Rolling offsets come from the very same WindowScheme grid window mode
+    # uses (aligned-down interior entries + the exact-tail entry), so the
+    # dense-mask oracle and the production compact path agree for align > 1.
+    # The old frac-scaled offsets disagreed with the grid whenever align
+    # rounded the window plan.
+    roll_offsets = (make_scheme(scfg, dims).offsets(rng, round_idx, C)
+                    if scfg.scheme == "rolling" else {})
 
     def client_mask(cap, ci):
         def leaf(full, axes):
@@ -301,17 +422,16 @@ def dense_client_masks(rng, abstract, axes_tree, scfg: SubmodelConfig,
                 if key not in keys:
                     continue
                 n = full.shape[d]
-                size = jnp.maximum(1, jnp.round(cap * n)).astype(jnp.int32)
+                a = min(scfg.align, n)
+                # align the per-client size exactly like make_scheme does
+                # (identical to the old max(1, round(cap*n)) when align=1)
+                size = jnp.clip(
+                    (jnp.round(cap * n).astype(jnp.int32) // a) * a, a, n)
                 if scfg.scheme == "static":
                     off = jnp.zeros((), jnp.int32)
                 elif scfg.scheme == "rolling":
-                    R = max(int(round(1.0 / max(scfg.capacity, 1e-3))), 1)
-                    e, r = round_idx // R, round_idx % R
-                    perm = jax.random.permutation(
-                        jax.random.fold_in(jax.random.PRNGKey(scfg.seed), e),
-                        R)
-                    frac = perm[r] / max(R - 1, 1)
-                    off = jnp.round(frac * (n - size)).astype(jnp.int32)
+                    off = (roll_offsets[key][ci] if key in roll_offsets
+                           else jnp.zeros((), jnp.int32))
                 else:  # random structured
                     kk = jax.random.fold_in(jax.random.fold_in(
                         jax.random.fold_in(jax.random.PRNGKey(scfg.seed),
@@ -414,13 +534,17 @@ class MaskFedAvg:
 
 def _build_window_fed(model_loss_fn, scfg: SubmodelConfig, abstract,
                       axes_tree, spmd_axis=None, kernel_backend=None,
-                      client_opt=None, server_opt=None) -> WindowFedAvg:
+                      client_opt=None, server_opt=None,
+                      windowed_loss_fn=None,
+                      fused_forward="auto") -> WindowFedAvg:
     dims = collect_axis_dims(abstract, axes_tree)
     scheme = make_scheme(scfg, dims)
     return WindowFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
                         axes_tree=axes_tree, scheme=scheme,
                         spmd_axis=spmd_axis, kernel_backend=kernel_backend,
-                        client_opt=client_opt, server_opt=server_opt)
+                        client_opt=client_opt, server_opt=server_opt,
+                        windowed_loss_fn=windowed_loss_fn,
+                        fused_forward=fused_forward)
 
 
 def _build_mask_fed(model_loss_fn, scfg: SubmodelConfig, abstract, axes_tree,

@@ -106,6 +106,13 @@ class WindowScheme:
             out[k] = out[src] * group
         return out
 
+    def grid_aligned(self, key: AxisKey, block: int) -> bool:
+        """True when every grid offset of ``key`` is a multiple of ``block``
+        — the condition under which a *traced* offset may take the fused
+        Pallas arm (``assume_aligned=True``).  The exact-tail grid entry
+        (kept for coverage) makes this False whenever (n - w) % block != 0."""
+        return bool(jnp.all(self.grids[key] % block == 0))
+
     def offsets(self, rng, round_idx, n_clients) -> Dict[AxisKey, jnp.ndarray]:
         """Per-client offsets {axis: [C] int32} for this round."""
         c = self.cfg
@@ -177,9 +184,29 @@ def make_scheme(submodel_cfg: SubmodelConfig, axis_dims) -> WindowScheme:
         if R == 1:
             grid = jnp.zeros((1,), jnp.int32)
         else:
-            grid = jnp.round(jnp.arange(R) * (n - w) / (R - 1)).astype(
-                jnp.int32)
-            grid = (grid // a) * a
+            g = [_align_down(round(i * (n - w) / (R - 1)), a)
+                 for i in range(R)]
+            # Tail coverage: aligning every offset down left the last
+            # n - w - align_down(n - w, a) units of the axis outside every
+            # window whenever (n - w) % a != 0, breaking the shuffled-window
+            # coverage premise.  Keep the exact n - w offset for the final
+            # grid entry — extraction handles unaligned offsets, and
+            # dispatch.rolling_matmul falls back to its oracle arm there.
+            g[-1] = n - w
+            # Aligning down can also open interior holes (consecutive
+            # offsets more than w apart, e.g. n=100 w=16 a=16): drop
+            # duplicates and insert aligned offsets until consecutive
+            # windows overlap or touch, so the union of rolling windows
+            # covers every unit.
+            step = max(_align_down(w, a), a)
+            out = [g[0]]
+            for o in g[1:]:
+                if o == out[-1]:
+                    continue
+                while o - out[-1] > w:
+                    out.append(out[-1] + step)
+                out.append(o)
+            grid = jnp.asarray(out, jnp.int32)
         grids[key] = grid
 
     # resolve derived sizes/grids and global R

@@ -112,7 +112,7 @@ class PaperExperiment:
         params, history = trainer.run(
             self._round_batches(scheme, uniform_cap), rounds)
         curve: List[Dict] = [
-            {"round": h["round"], "train_loss": h["loss"],
+            {"round": h["round"], "train_loss": float(h["loss"]),
              "test_loss": h["test_loss"], "test_acc": h["test_acc"]}
             for h in history if "test_loss" in h]
         # §5.3 generalization gap: global model on local-train vs test data

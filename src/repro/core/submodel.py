@@ -45,10 +45,18 @@ def masked_sgd_step(params, masks, grads, lr):
 
 def fillin_average(server, client_params, masks):
     """w_{r+1} = (1/N) sum_i (w_i + (1-m_i) ⊙ w_r)  — paper's aggregation,
-    computed in the algebraically identical delta form."""
+    computed in the algebraically identical delta form.
+
+    The delta is computed in f32: on bf16 params the subtraction would
+    round the client deltas in the param dtype (same hazard as the window
+    path's K-step delta, see ``WindowFedAvg._client_phase``), so the whole
+    pipeline upcasts and rounds back exactly once, matching
+    ``kernels.ref.fillin_agg_ref`` and the Pallas arm bit for bit."""
     def agg(w, ws, ms):
-        delta = (ms * (ws - w[None])).mean(0)
-        return w + delta.astype(w.dtype)
+        w32 = w.astype(jnp.float32)
+        delta = (ms.astype(jnp.float32)
+                 * (ws.astype(jnp.float32) - w32[None])).mean(0)
+        return (w32 + delta).astype(w.dtype)
     return jax.tree_util.tree_map(agg, server, client_params, masks)
 
 

@@ -21,12 +21,12 @@ import numpy as np
 
 
 def _record(round_idx, metrics) -> Dict[str, Any]:
-    """Per-round history record: scalars as floats; array metrics (e.g. the
-    [K, C] per-client losses) stay device arrays — no forced host sync."""
-    rec = {"round": round_idx}
-    for k, v in metrics.items():
-        rec[k] = float(v) if np.ndim(v) == 0 else v
-    return rec
+    """Per-round history record: every metric stays a device array.
+
+    ``float(v)`` here would block on the previous round's result and
+    serialize dispatch of the next jitted round; the host sync happens only
+    at log/eval/checkpoint boundaries and in :attr:`Trainer.losses`."""
+    return {"round": round_idx, **metrics}
 
 
 @dataclass
@@ -109,16 +109,18 @@ class Trainer:
             for cb in self.callbacks:
                 cb(r, self.params, rec)
             if self.log_every and (r % self.log_every == 0 or r == last):
-                extras = " ".join(f"{k} {v:.4f}" for k, v in rec.items()
+                # the log boundary is where the host sync is allowed
+                extras = " ".join(f"{k} {float(v):.4f}"
+                                  for k, v in rec.items()
                                   if k not in ("round", "loss")
                                   and np.ndim(v) == 0)
-                self.log_fn(f"round {r:4d} loss {rec['loss']:.4f}"
+                self.log_fn(f"round {r:4d} loss {float(rec['loss']):.4f}"
                             + (f"  {extras}" if extras else ""))
         return self.params, self.history
 
     @property
     def losses(self) -> List[float]:
-        return [h["loss"] for h in self.history]
+        return [float(h["loss"]) for h in self.history]
 
 
 def checkpoint_callback(path, every=0, meta=None):
@@ -131,7 +133,7 @@ def checkpoint_callback(path, every=0, meta=None):
 
     def cb(round_idx, params, record):
         from repro.checkpoint.checkpoint import save
-        losses.append(record["loss"])
+        losses.append(float(record["loss"]))
         if every and round_idx % every != 0:
             return
         save(path, params, {**(meta or {}), "round": round_idx + 1,

@@ -21,10 +21,12 @@ in one arm.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import submodel as sm
 from repro.kernels import compat, ref
@@ -32,6 +34,8 @@ from repro.kernels.masked_update import sgd_2d
 from repro.kernels.ops import (_from_2d, _to_2d, fillin_agg_tree,
                                masked_sgd_tree)
 from repro.kernels.rolling_matmul import rolling_matmul as _rolling_mm_pallas
+from repro.kernels.rolling_matmul_bwd import \
+    rolling_matmul_dx as _rolling_dx_pallas
 
 BACKENDS = ("pallas", "jnp", "auto")
 BACKEND_ENV = "REPRO_KERNEL_BACKEND"
@@ -97,9 +101,13 @@ def fillin_agg(server, client_params, client_masks, server_lr=1.0,
     if resolve_backend(backend) == "jnp":
         if server_lr == 1.0:
             return sm.fillin_average(server, client_params, client_masks)
+        # delta in f32 (not the param dtype): bf16 subtraction would round
+        # the client deltas — mirror sm.fillin_average / the Pallas arm.
         return jax.tree_util.tree_map(
             lambda w, ws, ms: (w.astype(jnp.float32) + server_lr
-                               * (ms * (ws - w[None])).mean(0)
+                               * (ms.astype(jnp.float32)
+                                  * (ws.astype(jnp.float32)
+                                     - w[None].astype(jnp.float32))).mean(0)
                                ).astype(w.dtype),
             server, client_params, client_masks)
     return fillin_agg_tree(server, client_params, client_masks,
@@ -111,34 +119,31 @@ def fillin_agg(server, client_params, client_masks, server_lr=1.0,
 # ---------------------------------------------------------------------------
 
 
-def _rolling_tileable(M, K, win, offset, bm, bn, bk, assume_aligned):
-    """Static check that the Pallas grid divides evenly and the offset lands
-    on a block boundary.  The kernel floor-rounds ``offset`` to a multiple of
-    ``bn`` (``off_blocks = offset // bn``), so an unaligned offset would be
-    silently wrong, not an error."""
-    bm, bn, bk = min(bm, M), min(bn, win), min(bk, K)
-    if M % bm or win % bn or K % bk:
-        return False
+def _offset_aligned(offset, block, assume_aligned):
+    """True when ``offset`` provably lands on a block boundary.  The kernels
+    floor-round the offset to a block multiple (``off_blocks = offset //
+    block``), so a misaligned offset would be silently wrong, not an error."""
     try:
-        return int(offset) % bn == 0
+        return int(offset) % block == 0
     except (TypeError, jax.errors.TracerArrayConversionError,
             jax.errors.ConcretizationTypeError):
         # Traced offset: alignment is unknowable here.  Only take the fused
-        # arm when the caller vouches for it (SubmodelConfig.align a multiple
-        # of the block width); otherwise the oracle arm is the safe default.
+        # arm when the caller vouches for it (window scheme offsets all
+        # multiples of the block width); otherwise the oracle arm is the
+        # safe default.
         return assume_aligned
 
 
-def rolling_matmul(x, w, offset, win, backend=None, bm=128, bn=128, bk=128,
-                   assume_aligned=False):
-    """y[M, win] = x[M, K] @ w[K, offset : offset+win].
+def _rolling_tileable(M, K, win, offset, bm, bn, bk, assume_aligned):
+    """Static check that the forward Pallas grid divides evenly and the
+    offset lands on a ``bn`` (output-column) block boundary."""
+    bm, bn, bk = min(bm, M), min(bn, win), min(bk, K)
+    if M % bm or win % bn or K % bk:
+        return False
+    return _offset_aligned(offset, bn, assume_aligned)
 
-    Pallas arm fuses the window into the matmul's index_map so inactive
-    columns of ``w`` are never read from HBM; jnp arm is the dynamic-slice
-    oracle.  Falls back to the oracle for shapes the MXU grid cannot tile,
-    and — because the kernel floor-rounds the offset to a block boundary —
-    for *traced* offsets unless ``assume_aligned=True`` (pass it when
-    ``SubmodelConfig.align`` is a multiple of ``bn``, as on TPU configs)."""
+
+def _rolling_fwd_arm(x, w, offset, win, backend, bm, bn, bk, assume_aligned):
     b = resolve_backend(backend)
     M, K = x.shape
     if b == "pallas" and _rolling_tileable(M, K, win, offset, bm, bn, bk,
@@ -146,3 +151,74 @@ def rolling_matmul(x, w, offset, win, backend=None, bm=128, bn=128, bk=128,
         return _rolling_mm_pallas(x, w, offset, win, bm=bm, bn=bn, bk=bk,
                                   interpret=interpret_mode())
     return ref.rolling_matmul_ref(x, w, offset, win)
+
+
+def _rolling_dx_arm(dy, w, offset, win, backend, bm, bn, bk, assume_aligned):
+    """dx = dy @ w[:, offset:offset+win]^T — second offset-prefetch kernel
+    (the contraction runs over the window, so the offset must land on a
+    ``bk`` block boundary); jnp oracle otherwise."""
+    b = resolve_backend(backend)
+    M = dy.shape[0]
+    K = w.shape[0]
+    bm_, bn_, bk_ = min(bm, M), min(bn, K), min(bk, win)
+    tileable = (M % bm_ == 0 and K % bn_ == 0 and win % bk_ == 0
+                and _offset_aligned(offset, bk_, assume_aligned))
+    if b == "pallas" and tileable:
+        return _rolling_dx_pallas(dy, w, offset, win, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret_mode())
+    wsub = jax.lax.dynamic_slice_in_dim(w, offset, win, axis=1)
+    return jax.lax.dot_general(
+        dy, wsub, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(dy.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _rolling_mm(x, w, offset, win, backend, bm, bn, bk, assume_aligned):
+    return _rolling_fwd_arm(x, w, offset, win, backend, bm, bn, bk,
+                            assume_aligned)
+
+
+def _rolling_mm_fwd(x, w, offset, win, backend, bm, bn, bk, assume_aligned):
+    y = _rolling_fwd_arm(x, w, offset, win, backend, bm, bn, bk,
+                         assume_aligned)
+    return y, (x, w, offset)
+
+
+def _rolling_mm_bwd(win, backend, bm, bn, bk, assume_aligned, res, dy):
+    """Custom VJP: dx through the offset-prefetch backward kernel (oracle
+    fallback), dW as a window scatter-add — exactly the transpose autodiff
+    derives for the slice-then-matmul oracle, so grads through the fused
+    arm match grads through extract-then-matmul."""
+    x, w, offset = res
+    dx = _rolling_dx_arm(dy, w, offset, win, backend, bm, bn, bk,
+                         assume_aligned)
+    dw_win = jax.lax.dot_general(
+        x, dy, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(w.dtype)
+    dw = jax.lax.dynamic_update_slice(
+        jnp.zeros(w.shape, dw_win.dtype), dw_win, (0, offset))
+    d_off = np.zeros(np.shape(offset), jax.dtypes.float0)
+    return dx, dw, d_off
+
+
+_rolling_mm.defvjp(_rolling_mm_fwd, _rolling_mm_bwd)
+
+
+def rolling_matmul(x, w, offset, win, backend=None, bm=128, bn=128, bk=128,
+                   assume_aligned=False):
+    """y[M, win] = x[M, K] @ w[K, offset : offset+win], differentiable.
+
+    Pallas arm fuses the window into the matmul's index_map so inactive
+    columns of ``w`` are never read from HBM; jnp arm is the dynamic-slice
+    oracle.  Falls back to the oracle for shapes the MXU grid cannot tile,
+    and — because the kernels floor-round the offset to a block boundary —
+    for *traced* offsets unless ``assume_aligned=True`` (pass it when every
+    offset the scheme can produce is a multiple of the block width, cf.
+    ``WindowScheme.grid_aligned``).
+
+    Registered with a custom VJP: ``dx = dy @ w[:, off:off+win]^T`` via the
+    offset-prefetch backward kernel (``kernels.rolling_matmul_bwd``), ``dW``
+    as a window scatter-add of ``x^T @ dy``; both halves dispatch per
+    backend with the jnp oracle as the autodiff fallback."""
+    return _rolling_mm(x, w, offset, win, backend, bm, bn, bk,
+                       assume_aligned)

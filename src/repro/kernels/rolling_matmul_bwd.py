@@ -1,0 +1,78 @@
+"""Backward Pallas kernel for the rolling-window matmul.
+
+Forward (``rolling_matmul.py``): ``y[M, win] = x[M, K] @ W[K, off:off+win]``.
+This module provides the input-gradient half of its custom VJP:
+
+    dx[M, K] = dy[M, win] @ W[K, off : off+win]^T
+
+as a second offset-prefetch kernel: the window offset again arrives through
+``pltpu.PrefetchScalarGridSpec`` and shifts the *column*-block index of W, so
+the backward pass — like the forward — reads only the active window of W
+from HBM and never materializes a W_sub (or W_sub^T) copy.
+
+The weight gradient needs no kernel: ``dW`` is a window scatter-add
+(``x^T @ dy`` placed at the offset, zero elsewhere), which is a single MXU
+matmul plus a ``dynamic_update_slice`` — see ``dispatch.rolling_matmul``'s
+VJP, where both halves are registered with the jnp oracle as the autodiff
+fallback for untileable shapes and unaligned traced offsets.
+
+Grid: (M/bm, K/bn, win/bk), window innermost for accumulator reuse; the
+contraction runs over the window axis, so the offset shifts the third grid
+index of W's BlockSpec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compat import pl, prefetch_scalar_grid_spec, vmem
+
+
+def _rolling_dx_kernel(off_ref, dy_ref, w_ref, o_ref, acc_ref, *, nj):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # dy block [bm, bk] · W block [bn, bk] contracted on the window axis
+    acc_ref[...] += jax.lax.dot_general(
+        dy_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def rolling_matmul_dx(dy, w, offset, win, *, bm=128, bn=128, bk=128,
+                      interpret=True):
+    """dy [M, win]; w [K, N]; offset: int32 scalar (multiple of bk).
+
+    Returns dx [M, K] = dy @ w[:, offset:offset+win]^T.
+    """
+    M = dy.shape[0]
+    K = w.shape[0]
+    bm, bn, bk = min(bm, M), min(bn, K), min(bk, win)
+    assert M % bm == 0 and K % bn == 0 and win % bk == 0
+    nj = win // bk
+    off_blocks = jnp.asarray(offset, jnp.int32)[None] // bk
+
+    grid_spec = prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(M // bm, K // bn, nj),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k, j, off: (i, j)),
+            pl.BlockSpec((bn, bk), lambda i, k, j, off: (k, off[0] + j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, k, j, off: (i, k)),
+        scratch_shapes=[vmem((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_rolling_dx_kernel, nj=nj),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, K), dy.dtype),
+        interpret=interpret,
+    )(off_blocks, dy, w)

@@ -41,6 +41,13 @@ def main():
                     help="fed-round kernel arm: fused Pallas kernels, jnp "
                          "oracles, or auto (Pallas iff on TPU). Default: "
                          "the REPRO_KERNEL_BACKEND env var, else auto")
+    ap.add_argument("--fused-forward", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="window mode: run the client phase through the "
+                         "fused rolling-window forward (no extract/scatter, "
+                         "no W_sub copy) when the scheme shares a window "
+                         "and only d_ff is windowed; 'on' forces it, 'off' "
+                         "keeps the extract-based client phase")
     ap.add_argument("--client-opt", default="sgd",
                     choices=sorted(api.CLIENT_OPTS),
                     help="local-step optimizer (paper: sgd)")
@@ -55,6 +62,11 @@ def main():
                     help="force the per-client scatter aggregation even "
                          "when every client trains the same window "
                          "(default: the REPRO_NO_SHARED_WINDOW env var)")
+    ap.add_argument("--axes", nargs="+", default=None,
+                    help="semantic axes to window (default: the "
+                         "SubmodelConfig default tuple); e.g. "
+                         "'--axes d_ff' is the shape the fused forward "
+                         "requires")
     ap.add_argument("--capacity", type=float, default=0.5)
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=4)
@@ -72,16 +84,18 @@ def main():
     model = build_model(cfg, moe_path="dense" if args.reduced else "dropping",
                         remat=not args.reduced)
     params = model.init(jax.random.PRNGKey(args.seed))
+    axes_kw = {"axes": tuple(args.axes)} if args.axes else {}
     scfg = SubmodelConfig(scheme=args.scheme, capacity=args.capacity,
                           local_steps=args.local_steps,
                           clients_per_round=args.clients,
                           client_lr=args.lr, seed=args.seed,
                           shared_window=False if args.no_shared_window
-                          else None)
+                          else None, **axes_kw)
     fed = api.fed_round(model, scfg, mode=args.mode,
                         client_opt=args.client_opt,
                         server_opt=args.server_opt,
-                        kernel_backend=args.kernel_backend)
+                        kernel_backend=args.kernel_backend,
+                        fused_forward=args.fused_forward)
 
     vision = (cfg.vision_patches, cfg.vision_d) if cfg.vision_stub else None
     it = lm_batches(cfg.vocab, (args.local_steps, args.clients, args.mb),
@@ -95,7 +109,7 @@ def main():
             f"{s} ({(time.time() - t0) / (trainer.round_idx or 1):.2f}"
             "s/round)", flush=True))
     params, history = trainer.run(it, args.rounds)
-    losses = [h["loss"] for h in history]
+    losses = trainer.losses  # history keeps device arrays; sync once here
     if args.ckpt:
         ckpt_save(args.ckpt, params,
                   {"arch": args.arch, "rounds": args.rounds,

@@ -17,11 +17,25 @@ Axis names used across the zoo::
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class MLPWindow(NamedTuple):
+    """Active ``d_ff`` window for the fused rolling-window forward.
+
+    ``offset`` may be traced (per-round), ``win`` is static (SPMD shapes);
+    ``backend``/``assume_aligned`` are the ``dispatch.rolling_matmul`` knobs
+    threaded from the fed round.  ``Model.forward(..., window=(offset, win))``
+    accepts a bare tuple and normalizes it to this."""
+
+    offset: Any
+    win: int
+    backend: Optional[str] = None
+    assume_aligned: bool = False
 
 
 # ---------------------------------------------------------------------------

@@ -21,8 +21,9 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (ParamBuilder, mlp_apply, mlp_params,
-                                 rms_norm, sinusoidal_positions, softmax_xent)
+from repro.models.layers import (MLPWindow, ParamBuilder, mlp_apply,
+                                 mlp_apply_rolling, mlp_params, rms_norm,
+                                 sinusoidal_positions, softmax_xent)
 from repro.sharding.ctx import constrain
 
 
@@ -124,8 +125,12 @@ def _attn_any(p, x, cfg, positions, mode, cache=None, pos=None, mesh=None,
 
 def block_apply(p, h, cfg, stack, positions, mode="train", cache=None,
                 pos=None, mesh=None, cp=False, moe_path="dropping",
-                valid=None, rope_pos=None):
-    """One layer.  Returns (h, aux_loss, new_cache_layer)."""
+                valid=None, rope_pos=None, window=None):
+    """One layer.  Returns (h, aux_loss, new_cache_layer).
+
+    ``window`` (an :class:`MLPWindow`, or None) routes the MLP through the
+    fused rolling-window forward on the FULL weights — only the active
+    ``d_ff`` window is read from HBM, no compact W_sub copy exists."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     x = rms_norm(h, p["ln1"], cfg.norm_eps)
@@ -159,6 +164,10 @@ def block_apply(p, h, cfg, stack, positions, mode="train", cache=None,
     x2 = rms_norm(h, p["ln2"], cfg.norm_eps)
     if stack == "moe_layers":
         out, aux = moe_mod.moe_apply(p["moe"], x2, cfg, path=moe_path)
+    elif window is not None:
+        out = mlp_apply_rolling(p["mlp"], x2, window.offset, window.win,
+                                cfg.act, backend=window.backend,
+                                assume_aligned=window.assume_aligned)
     else:
         out = mlp_apply(p["mlp"], x2, cfg.act)
     h = h + constrain(out, "batch", "seq", "d_model")
@@ -232,7 +241,8 @@ class Model:
 
     # -- stacks ---------------------------------------------------------------
     def _run_stacks(self, params, h, positions, mode, caches=None, pos=None,
-                    mesh=None, cp=False, valid=None, rope_pos=None):
+                    mesh=None, cp=False, valid=None, rope_pos=None,
+                    window=None):
         cfg = self.cfg
         aux_total = jnp.zeros((), jnp.float32)
         new_caches = {}
@@ -245,7 +255,8 @@ class Model:
                     h, aux = carry
                     h, a, nc = block_apply(lp, h, cfg, stack, positions,
                                            mode, None, pos, mesh, cp,
-                                           self.moe_path, valid, rope_pos)
+                                           self.moe_path, valid, rope_pos,
+                                           window)
                     return (h, aux + a), nc
                 xs = stack_params
             else:
@@ -254,7 +265,8 @@ class Model:
                     lp, lc = xs_
                     h, a, nc = block_apply(lp, h, cfg, stack, positions,
                                            mode, lc, pos, mesh, cp,
-                                           self.moe_path, valid, rope_pos)
+                                           self.moe_path, valid, rope_pos,
+                                           window)
                     return (h, aux + a), nc
                 xs = (stack_params, cache_stack)
 
@@ -266,20 +278,29 @@ class Model:
         return h, aux_total, new_caches
 
     # -- entry points ---------------------------------------------------------
-    def forward(self, params, tokens, extra=None):
+    def forward(self, params, tokens, extra=None, window=None):
+        """``window=(offset, win)`` (or an :class:`MLPWindow`) runs every MLP
+        block through the fused rolling-window forward on the full weights —
+        the window-mode training path without compact extraction."""
         cfg = self.cfg
+        if window is not None and not isinstance(window, MLPWindow):
+            window = MLPWindow(*window)
         h = self._embed(params, tokens, extra)
         B, S = h.shape[0], h.shape[1]
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-        h, aux, _ = self._run_stacks(params, h, positions, "train")
+        h, aux, _ = self._run_stacks(params, h, positions, "train",
+                                     window=window)
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         return self._head(params, h), aux, h
 
-    def loss(self, params, batch):
-        """batch: tokens [B,S] (or [B,S,CB]); optional patches, mask."""
+    def loss(self, params, batch, window=None):
+        """batch: tokens [B,S] (or [B,S,CB]); optional patches, mask.
+        ``window``: see :meth:`forward` (threaded to the MTP block too)."""
         cfg = self.cfg
+        if window is not None and not isinstance(window, MLPWindow):
+            window = MLPWindow(*window)
         tokens = batch["tokens"]
-        logits, aux, h = self.forward(params, tokens, batch)
+        logits, aux, h = self.forward(params, tokens, batch, window=window)
         P = cfg.vision_patches if (cfg.vision_stub and "patches" in batch) \
             else 0
         if P:
@@ -298,7 +319,7 @@ class Model:
                                          (B, hp.shape[1]))
             hmtp, _, _ = block_apply(params["mtp"], hp, cfg, "layers",
                                      positions, "train",
-                                     moe_path=self.moe_path)
+                                     moe_path=self.moe_path, window=window)
             hmtp = rms_norm(hmtp, params["mtp"]["final"], cfg.norm_eps)
             mtp_logits = self._head(params, hmtp)
             mtp = softmax_xent(mtp_logits[:, :-2], tokens[:, 2:])

@@ -1,0 +1,89 @@
+"""bf16 regression tests for the fill-in aggregation.
+
+``submodel.fillin_average`` (and the jnp arms of ``dispatch.fillin_agg``)
+used to compute ``ws - w[None]`` in the param dtype; on bf16 params that
+rounds client deltas in bf16 before the mean, silently diverging from the
+f32 oracle (``kernels.ref.fillin_agg_ref``) and starving small K-step
+updates.  The fixed pipeline upcasts to f32 and rounds back exactly once.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SubmodelConfig
+from repro.core import submodel as sm
+from repro.core.fedavg import _build_mask_fed
+from repro.kernels import dispatch, ref
+
+
+def _bf16_clients(seed=0, C=4, n=4096):
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (n,)).astype(jnp.bfloat16)
+    # client params NOT near w: the bf16 subtraction rounds exactly here
+    ws = (jax.random.normal(jax.random.fold_in(k, 1), (C, n)) * 3.0
+          ).astype(jnp.bfloat16)
+    ms = (jax.random.uniform(jax.random.fold_in(k, 2), (C, n)) > 0.5
+          ).astype(jnp.float32)
+    return w, ws, ms
+
+
+def test_fillin_average_bf16_matches_f32_oracle():
+    """The whole delta pipeline must run in f32 with ONE final rounding —
+    bitwise the reference aggregation (fails when the subtraction happens
+    in the bf16 param dtype)."""
+    w, ws, ms = _bf16_clients()
+    C = ws.shape[0]
+    got = sm.fillin_average({"w": w}, {"w": ws}, {"w": ms})["w"]
+    want = ref.fillin_agg_ref(w, ws, ms, 1.0 / C)
+    np.testing.assert_array_equal(np.asarray(got.astype(jnp.float32)),
+                                  np.asarray(want.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("server_lr", [1.0, 0.5])
+def test_fillin_agg_bf16_backend_arms_match(server_lr):
+    """jnp arm (both server_lr branches) == pallas arm on bf16 params —
+    every arm upcasts to f32 internally."""
+    w, ws, ms = _bf16_clients(seed=1, n=1024)
+    out_j = dispatch.fillin_agg({"w": w}, {"w": ws}, {"w": ms},
+                                server_lr=server_lr, backend="jnp")["w"]
+    out_p = dispatch.fillin_agg({"w": w}, {"w": ws}, {"w": ms},
+                                server_lr=server_lr, backend="pallas")["w"]
+    np.testing.assert_allclose(np.asarray(out_j.astype(jnp.float32)),
+                               np.asarray(out_p.astype(jnp.float32)),
+                               rtol=0, atol=2 * np.finfo(np.float32).eps
+                               * np.abs(np.asarray(
+                                   out_j.astype(jnp.float32))).max())
+
+
+def test_bf16_tiny_lr_mask_round_moves_params():
+    """A tiny-lr bf16 mask round must still move the params (and stay
+    finite) — the round is not a silent no-op."""
+    k = jax.random.PRNGKey(0)
+    params = {"w1": (jax.random.normal(k, (16, 32)) * 0.3
+                     ).astype(jnp.bfloat16),
+              "w2": (jax.random.normal(jax.random.fold_in(k, 1), (32,))
+                     * 0.3).astype(jnp.bfloat16)}
+    ab = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    axes = {"w1": ("d_model", "d_ff"), "w2": ("d_ff",)}
+
+    def loss(wt, b):
+        h = jnp.tanh(b["x"] @ wt["w1"].astype(jnp.float32))
+        r = h @ wt["w2"].astype(jnp.float32) - b["y"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.standard_normal((2, 4, 8, 16)),
+                              jnp.float32),
+             "y": jnp.asarray(rng.standard_normal((2, 4, 8)), jnp.float32)}
+    scfg = SubmodelConfig(scheme="bernoulli", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=1e-3)
+    fed = _build_mask_fed(loss, scfg, ab, axes, np.full(4, 0.5))
+    new, m = jax.jit(fed.round)(params, batch, 0, jax.random.PRNGKey(7))
+    assert np.isfinite(float(m["loss"]))
+    moved = sum(int((a != b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(new), jax.tree_util.tree_leaves(params)))
+    assert moved > 0, "tiny-lr bf16 mask round was a silent no-op"
+    assert all(np.isfinite(np.asarray(l, np.float32)).all()
+               for l in jax.tree_util.tree_leaves(new))

@@ -39,7 +39,7 @@ def test_compat_resolves_on_installed_jax():
 def test_compat_sole_tpu_importer():
     """Policy: all Pallas TPU symbols go through kernels/compat.py."""
     pat = re.compile(r"pallas\.tpu|pallas\s+import\s+tpu")
-    offenders = []
+    offenders, scanned = [], set()
     for root, _, files in os.walk(SRC):
         for f in files:
             if not f.endswith(".py"):
@@ -47,10 +47,16 @@ def test_compat_sole_tpu_importer():
             path = os.path.join(root, f)
             if path.endswith(os.path.join("kernels", "compat.py")):
                 continue
+            scanned.add(os.path.relpath(path, SRC))
             with open(path) as fh:
                 if pat.search(fh.read()):
                     offenders.append(os.path.relpath(path, SRC))
     assert not offenders, f"pallas.tpu imported outside compat: {offenders}"
+    # the sweep must keep covering every kernel module, in particular the
+    # rolling-matmul forward AND the newer backward kernel
+    for mod in ("rolling_matmul.py", "rolling_matmul_bwd.py",
+                "masked_update.py", "ssd_chunk.py", "dispatch.py"):
+        assert os.path.join("repro", "kernels", mod) in scanned, mod
 
 
 def test_auto_backend_resolution(monkeypatch):

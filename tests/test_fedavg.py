@@ -67,6 +67,37 @@ def test_window_equals_mask_mode(scheme):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
 
 
+def test_window_equals_mask_mode_aligned():
+    """align=8 with d_ff=100: dense rolling masks must be driven by the
+    same WindowScheme grid as window mode (aligned interior entries + the
+    exact-tail offset 52), so the oracle and production paths agree for
+    align > 1 — they used to diverge (frac-scaled unaligned offsets)."""
+    cfg = replace(get_reduced_config("tinyllama_1_1b"), n_layers=2, vocab=64,
+                  d_model=64, d_ff=100, n_heads=4, n_kv_heads=2, head_dim=16)
+    m = build_model(cfg, remat=False)
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1,
+                          axes=("d_ff",), align=8)
+    ab, axes = m.abstract_params(), m.axes()
+    fedw = make_window_fed_round(m.loss, scfg, ab, axes)
+    fedm = make_mask_fed_round(m.loss, scfg, ab, axes, np.full(4, 0.5))
+    # window plan: w=48, grid [0, 24, 52] (tail kept exact for coverage)
+    key = ("d_ff", 100)
+    assert fedw.scheme.sizes[key] == 48
+    np.testing.assert_array_equal(np.asarray(fedw.scheme.grids[key]),
+                                  [0, 24, 52])
+    n_rounds = fedw.scheme.n_windows  # hit every window incl. the tail
+    pw, hw = run_rounds(fedw, params, _batches(cfg, 2, 4, 2, 16), n_rounds,
+                        jax.random.PRNGKey(1))
+    pm, hm = run_rounds(fedm, params, _batches(cfg, 2, 4, 2, 16), n_rounds,
+                        jax.random.PRNGKey(1))
+    np.testing.assert_allclose(_losses(hw), _losses(hm), rtol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(pw),
+                    jax.tree_util.tree_leaves(pm)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
 def test_full_scheme_is_fedavg():
     """capacity=1 / scheme=full reduces to plain FedAvg (identical params)."""
     cfg, m = _tiny_model()

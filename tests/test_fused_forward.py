@@ -1,0 +1,197 @@
+"""The fused rolling-window forward (tentpole property tests).
+
+When ``WindowFedAvg`` resolves a shared window and only ``d_ff`` is
+windowed, the client phase skips extract/scatter entirely: clients run K
+steps on the FULL tree through the window-aware ``Model.forward`` whose MLP
+blocks call ``mlp_apply_rolling``.  The fused round must be **bitwise
+equal (f32, 0 ulp)** to the extract-based round — pinned here across
+schemes, optimizers, backends, and the unaligned exact-tail grid entry.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import SubmodelConfig, get_reduced_config
+from repro.data.synthetic import lm_batches
+from repro.models import build_model
+
+
+def _tiny_model(d_ff=128):
+    cfg = replace(get_reduced_config("tinyllama_1_1b"), n_layers=2, vocab=64,
+                  d_model=64, d_ff=d_ff, n_heads=4, n_kv_heads=2,
+                  head_dim=16)
+    return cfg, build_model(cfg, remat=False)
+
+
+def _batch(cfg, K=2, C=4, mb=2, S=16, seed=0):
+    it = lm_batches(cfg.vocab, (K, C, mb), S, seed=seed)
+    return {k: jnp.asarray(v) for k, v in next(it).items()}
+
+
+def _maxdelta(t1, t2):
+    return max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(t1), jax.tree_util.tree_leaves(t2)))
+
+
+def _pair(m, scfg, **kw):
+    return (api.fed_round(m, scfg, fused_forward="on", **kw),
+            api.fed_round(m, scfg, fused_forward="off", **kw))
+
+
+# -- the acceptance property: fused == extract to 0 ulp on f32 ----------------
+
+
+@pytest.mark.parametrize("scheme", ["rolling", "static", "importance"])
+def test_fused_round_bitwise_equals_extract(scheme):
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme=scheme, capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1,
+                          axes=("d_ff",))
+    fused, extract = _pair(m, scfg)
+    assert fused.use_fused and not extract.use_fused
+    batch = _batch(cfg)
+    step_f, step_e = jax.jit(fused.round), jax.jit(extract.round)
+    for r in range(3):  # cover several grid windows
+        pf, mf = step_f(params, batch, r, jax.random.PRNGKey(1))
+        pe, me = step_e(params, batch, r, jax.random.PRNGKey(1))
+        assert _maxdelta(pf, pe) == 0.0, f"round {r} not bitwise equal"
+        np.testing.assert_array_equal(np.asarray(mf["client_loss"]),
+                                      np.asarray(me["client_loss"]))
+        params = pf
+
+
+def test_fused_round_bitwise_on_unaligned_tail():
+    """align=8 with d_ff=100 puts the exact-tail offset (52) off the
+    alignment grid — the fused arm must drop to the oracle matmul there and
+    stay bitwise-equal to extraction."""
+    cfg, m = _tiny_model(d_ff=100)
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1,
+                          axes=("d_ff",), align=8)
+    fused, extract = _pair(m, scfg)
+    assert fused.use_fused
+    assert not fused._fused_assume_aligned  # tail entry breaks alignment
+    batch = _batch(cfg)
+    step_f, step_e = jax.jit(fused.round), jax.jit(extract.round)
+    R = fused.scheme.n_windows
+    for r in range(R):  # every grid window incl. the exact tail
+        pf, _ = step_f(params, batch, r, jax.random.PRNGKey(1))
+        pe, _ = step_e(params, batch, r, jax.random.PRNGKey(1))
+        assert _maxdelta(pf, pe) == 0.0, f"round {r} not bitwise equal"
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_fused_round_backends(backend):
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1,
+                          axes=("d_ff",))
+    fused, extract = _pair(m, scfg, kernel_backend=backend)
+    batch = _batch(cfg)
+    pf, _ = jax.jit(fused.round)(params, batch, 0, jax.random.PRNGKey(1))
+    pe, _ = jax.jit(extract.round)(params, batch, 0, jax.random.PRNGKey(1))
+    tol = 0.0 if backend == "jnp" else 5e-4
+    assert _maxdelta(pf, pe) <= tol
+
+
+def test_fused_with_server_opt_bitwise():
+    """round_with_server_opt: the fused full-shaped mean delta (exact zeros
+    outside the window) must reproduce the extract path's scattered
+    pseudo-gradient bit for bit."""
+    from repro.core.server_opt import server_momentum
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1,
+                          axes=("d_ff",))
+    fused, extract = _pair(m, scfg)
+    batch = _batch(cfg)
+    opt = server_momentum(lr=1.0)
+    step_f = jax.jit(lambda p, s, b, r, rng: fused.round_with_server_opt(
+        p, s, b, r, opt, rng=rng))
+    step_e = jax.jit(lambda p, s, b, r, rng: extract.round_with_server_opt(
+        p, s, b, r, opt, rng=rng))
+    sf = se = opt.init(m.abstract_params())
+    pf = pe = params
+    for r in range(2):
+        pf, sf, _ = step_f(pf, sf, batch, r, jax.random.PRNGKey(1))
+        pe, se, _ = step_e(pe, se, batch, r, jax.random.PRNGKey(1))
+        assert _maxdelta(pf, pe) == 0.0
+        assert _maxdelta(sf, se) == 0.0
+
+
+def test_fused_trains():
+    """Sanity: the fused path actually trains (loss decreases)."""
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1,
+                          axes=("d_ff",))
+    fed = api.fed_round(m, scfg, fused_forward="on")
+    it = ( {k: jnp.asarray(v) for k, v in b.items()}
+          for b in lm_batches(cfg.vocab, (2, 4, 2), 16, seed=0))
+    trainer = api.Trainer(fed, params, rng=jax.random.PRNGKey(1))
+    _, history = trainer.run(it, 6)
+    losses = trainer.losses
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+
+
+# -- resolution / validation --------------------------------------------------
+
+
+def test_fused_auto_resolution():
+    cfg, m = _tiny_model()
+    only_dff = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                              clients_per_round=4, axes=("d_ff",))
+    multi = replace(only_dff, axes=("d_ff", "heads", "kv_heads"))
+    assert api.fed_round(m, only_dff).use_fused
+    # multiple windowed axes -> extract path
+    assert not api.fed_round(m, multi).use_fused
+    # forcing it on a multi-axis scheme must refuse loudly
+    with pytest.raises(ValueError, match="d_ff"):
+        api.fed_round(m, multi, fused_forward="on")
+    # a raw triple fuses iff its loss_fn is window-aware
+    triple = (m.loss, m.abstract_params(), m.axes())
+    assert api.fed_round(triple, only_dff).use_fused
+    plain = (lambda p, b: m.loss(p, b), m.abstract_params(), m.axes())
+    assert not api.fed_round(plain, only_dff).use_fused
+    with pytest.raises(ValueError, match="windowed forward"):
+        api.fed_round(plain, only_dff, fused_forward="on")
+    # per-client scatter baseline (no shared window) cannot fuse
+    unshared = replace(only_dff, shared_window=False)
+    assert not api.fed_round(m, unshared).use_fused
+    with pytest.raises(ValueError, match="share"):
+        api.fed_round(m, unshared, fused_forward="on")
+    # mask mode has no fused arm
+    bern = replace(only_dff, scheme="bernoulli")
+    with pytest.raises(ValueError, match="window mode"):
+        api.fed_round(m, bern, fused_forward="on")
+
+
+def test_windowed_forward_matches_compact_forward():
+    """Model.loss(params, batch, window=...) == Model.loss on the extracted
+    compact tree (the layer-level equivalence the round builds on)."""
+    from repro.core import extract as ex
+    from repro.core.masking import collect_axis_dims, make_scheme
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, axes=("d_ff",))
+    scheme = make_scheme(scfg, collect_axis_dims(m.abstract_params(),
+                                                 m.axes()))
+    key = next(iter(scheme.sizes))
+    win = scheme.sizes[key]
+    off = int(scheme.grids[key][1])
+    batch = {k: v[0, 0] for k, v in _batch(cfg).items()}
+    sub = ex.extract(params, m.axes(), {key: off}, scheme.sizes)
+    l_compact, _ = m.loss(sub, batch)
+    l_fused, _ = m.loss(params, batch, window=(off, win))
+    np.testing.assert_array_equal(np.asarray(l_compact),
+                                  np.asarray(l_fused))

@@ -61,6 +61,31 @@ def test_never_windowed_axes():
     assert ("d_ff", 96) in sch.sizes
 
 
+def test_rolling_grid_tail_coverage_unaligned():
+    """When (n - w) % align != 0, aligning every offset down left the last
+    units of the axis outside every rolling window.  The final grid entry
+    must keep the exact n - w offset so the union of windows covers every
+    unit (the shuffled-coverage premise of the convergence argument)."""
+    for n, align, capacity in ((100, 8, 0.5), (96, 8, 0.34), (100, 16, 0.25),
+                               (33, 4, 0.5)):
+        scfg = SubmodelConfig(scheme="rolling", capacity=capacity,
+                              axes=("d_ff",), align=align)
+        sch = make_scheme(scfg, {("d_ff", n): None})
+        key = ("d_ff", n)
+        w = sch.sizes[key]
+        covered = np.zeros(n, bool)
+        for r in range(sch.n_windows):
+            o = int(sch.offsets(jax.random.PRNGKey(0), r, 1)[key][0])
+            assert 0 <= o <= n - w, (n, align, capacity, o)
+            covered[o:o + w] = True
+        assert covered.all(), (n, align, capacity, np.flatnonzero(~covered))
+        # interior grid entries stay aligned; only the tail may be exact
+        grid = np.asarray(sch.grids[key])
+        a = min(align, n)
+        assert (grid[:-1] % a == 0).all()
+        assert int(grid[-1]) == n - w
+
+
 def test_sub_abstract_shapes():
     scfg = SubmodelConfig(scheme="rolling", capacity=0.5,
                           axes=("d_ff", "heads", "kv_heads"))

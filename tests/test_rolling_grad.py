@@ -1,0 +1,155 @@
+"""Gradient tests for ``dispatch.rolling_matmul``'s custom VJP.
+
+The fused rolling-window matmul must be *differentiation-transparent*:
+``jax.grad`` through ``mlp_apply_rolling`` (full weights, fused window)
+equals ``jax.grad`` through extract-then-``mlp_apply`` (compact weights),
+on both kernel backends, including the traced-offset
+``assume_aligned=True`` arm the fused fed round uses.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch
+from repro.kernels.rolling_matmul_bwd import rolling_matmul_dx
+from repro.models.layers import mlp_apply, mlp_apply_rolling
+
+
+def _mlp_problem(D=128, F=512, seed=0):
+    k = jax.random.PRNGKey(seed)
+    p = {"w_gate": jax.random.normal(k, (D, F)) * 0.1,
+         "w_up": jax.random.normal(jax.random.fold_in(k, 1), (D, F)) * 0.1,
+         "w_down": jax.random.normal(jax.random.fold_in(k, 2),
+                                     (F, D)) * 0.1}
+    x = jax.random.normal(jax.random.fold_in(k, 3), (2, 16, D))
+    return p, x
+
+
+def _extract_sub(p, off, win):
+    return {"w_gate": jax.lax.dynamic_slice_in_dim(p["w_gate"], off, win, 1),
+            "w_up": jax.lax.dynamic_slice_in_dim(p["w_up"], off, win, 1),
+            "w_down": jax.lax.dynamic_slice_in_dim(p["w_down"], off, win, 0)}
+
+
+def _scatter_back(g_sub, p, off):
+    """Compact grads placed into full-shaped zeros (what the fused grads
+    must equal on full weights)."""
+    z = jax.tree_util.tree_map(jnp.zeros_like, p)
+    return {
+        "w_gate": jax.lax.dynamic_update_slice(z["w_gate"],
+                                               g_sub["w_gate"], (0, off)),
+        "w_up": jax.lax.dynamic_update_slice(z["w_up"],
+                                             g_sub["w_up"], (0, off)),
+        "w_down": jax.lax.dynamic_update_slice(z["w_down"],
+                                               g_sub["w_down"], (off, 0)),
+    }
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_grad_mlp_rolling_equals_extract(backend):
+    p, x = _mlp_problem()
+    off, win = 128, 256
+    tol = 0 if backend == "jnp" else 1e-4
+
+    def loss_fused(p, x):
+        return jnp.sum(jnp.tanh(
+            mlp_apply_rolling(p, x, off, win, backend=backend)))
+
+    def loss_extract(p, x):
+        return jnp.sum(jnp.tanh(mlp_apply(_extract_sub(p, off, win), x)))
+
+    (gp_f, gx_f) = jax.grad(loss_fused, argnums=(0, 1))(p, x)
+    (gp_e, gx_e) = jax.grad(loss_extract, argnums=(0, 1))(p, x)
+    np.testing.assert_allclose(np.asarray(gx_f), np.asarray(gx_e),
+                               rtol=tol, atol=tol)
+    for kk in p:
+        np.testing.assert_allclose(np.asarray(gp_f[kk]),
+                                   np.asarray(gp_e[kk]),
+                                   rtol=tol, atol=tol, err_msg=kk)
+    # out-of-window weight grads are exactly zero (fill-in semantics)
+    assert float(jnp.abs(gp_f["w_gate"][:, :off]).max()) == 0.0
+    assert float(jnp.abs(gp_f["w_gate"][:, off + win:]).max()) == 0.0
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_grad_traced_aligned_offset(backend):
+    """Traced offset + assume_aligned=True (the fused fed-round arm): grads
+    under jit match the static-offset extract grads."""
+    p, x = _mlp_problem()
+    win = 256
+
+    @jax.jit
+    def grads(off):
+        def loss(p, x):
+            return jnp.sum(mlp_apply_rolling(p, x, off, win,
+                                             backend=backend,
+                                             assume_aligned=True))
+        return jax.grad(loss)(p, x)
+
+    g = grads(jnp.int32(128))
+
+    def loss_extract(p, x):
+        return jnp.sum(mlp_apply(_extract_sub(p, 128, win), x))
+
+    ge = jax.grad(loss_extract)(p, x)
+    tol = 1e-4
+    for kk in p:
+        np.testing.assert_allclose(np.asarray(g[kk]), np.asarray(ge[kk]),
+                                   rtol=tol, atol=tol, err_msg=kk)
+
+
+def test_grad_traced_unaligned_offset_takes_oracle():
+    """Without assume_aligned a traced unaligned offset must produce
+    *correct* grads (oracle arm) even on the pallas backend."""
+    p, x = _mlp_problem()
+    win = 256
+
+    @jax.jit
+    def grads(off):
+        def loss(p, x):
+            return jnp.sum(mlp_apply_rolling(p, x, off, win,
+                                             backend="pallas"))
+        return jax.grad(loss)(p, x)
+
+    g = grads(jnp.int32(100))  # NOT a block multiple
+    ge = jax.grad(lambda p, x: jnp.sum(
+        mlp_apply(_extract_sub(p, 100, win), x)))(p, x)
+    for kk in p:
+        np.testing.assert_allclose(np.asarray(g[kk]), np.asarray(ge[kk]),
+                                   rtol=1e-5, atol=1e-5, err_msg=kk)
+
+
+def test_rolling_dx_kernel_matches_oracle():
+    """The backward kernel itself: dx = dy @ W[:, off:off+win]^T."""
+    k = jax.random.PRNGKey(0)
+    dy = jax.random.normal(k, (128, 256))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (256, 512))
+    off = 128
+    got = rolling_matmul_dx(dy, w, off, 256)
+    want = dy @ w[:, off:off + 256].T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_rolling_matmul_jnp_grads_bitwise_vs_autodiff():
+    """The jnp arm's custom VJP must be bitwise the plain autodiff of the
+    slice-then-matmul oracle (this is what makes the fused fed round
+    bitwise-equal to the extract round on f32)."""
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (64, 128))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (128, 384))
+    off, win = 128, 128
+
+    def f(x, w):
+        return jnp.sum(jnp.tanh(
+            dispatch.rolling_matmul(x, w, off, win, backend="jnp")))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.tanh(
+            x @ jax.lax.dynamic_slice_in_dim(w, off, win, axis=1)))
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_array_equal(np.asarray(gx), np.asarray(rx))
+    np.testing.assert_array_equal(np.asarray(gw), np.asarray(rw))
