@@ -369,10 +369,11 @@ def fed_round_pallas(rounds):
 
 
 def fed_round_fused(rounds):
-    """Fused rolling-window client phase vs the extract-based round on one
-    transformer: the two must be bitwise-equal on f32, the fused arm must
-    not be slower, and the fused client phase must materialize no stacked
-    per-client W_sub copy (checked in the compiled HLO)."""
+    """Fused multi-axis window client phase vs the extract-based round on
+    one transformer (full default SubmodelConfig.axes: d_ff + GQA-coupled
+    heads/kv_heads here): the two must be bitwise-equal on f32, the fused
+    arm must not be slower, and the fused client phase must materialize no
+    stacked per-client W_sub copy (checked in the compiled HLO)."""
     import jax
     import jax.numpy as jnp
     from dataclasses import replace
@@ -381,14 +382,19 @@ def fed_round_fused(rounds):
     from repro.data.synthetic import lm_batches
     from repro.models import build_model
 
-    cfg = replace(get_reduced_config("tinyllama_1_1b"), n_layers=2)
+    # head_dim=16 keeps the flattened head layout (H*hd) from colliding
+    # with the d_ff window size in the HLO shape-string count below.
+    cfg = replace(get_reduced_config("tinyllama_1_1b"), n_layers=2,
+                  head_dim=16)
     m = build_model(cfg, remat=False)
     params = m.init(jax.random.PRNGKey(0))
+    # full default axes tuple — the multi-axis fused arm is the whole point
     scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
-                          clients_per_round=4, client_lr=0.05,
-                          axes=("d_ff",))
+                          clients_per_round=4, client_lr=0.05)
     feds = {"fused": api.fed_round(m, scfg, fused_forward="on"),
             "extract": api.fed_round(m, scfg, fused_forward="off")}
+    emit("fed_round_fused", "windowed_axes",
+         " ".join(sorted(k[0] for k in feds["fused"]._fused_keys)))
     it = lm_batches(cfg.vocab, (2, 4, 2), 64)
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
 
@@ -415,11 +421,14 @@ def fed_round_fused(rounds):
          round(times["extract"] / times["fused"], 3))
 
     # Client-phase HLO: the extract arm stacks per-client compact W_sub
-    # copies [C, L, D, win]; the fused arm reads the window in place and
-    # must allocate none.
+    # copies [C, L, D, win]; the fused arm reads every window in place and
+    # must allocate none.  Only the MLP window shape is counted — the
+    # attention sub stack [C, L, D, hwin, hd] is indistinguishable from
+    # the FULL wk/wv tensors whenever hwin == n_kv_heads (capacity 1/G),
+    # so a string count over it cannot witness anything.
     C, L, D = scfg.clients_per_round, cfg.n_layers, cfg.d_model
-    win = feds["fused"].scheme.sizes[feds["fused"]._fused_key]
-    sub_shape = f"f32[{C},{L},{D},{win}]"
+    win = feds["fused"].scheme.sizes[("d_ff", cfg.d_ff)]
+    sub_shapes = [f"f32[{C},{L},{D},{win}]"]
 
     def client_hlo(fed, fused):
         def f(p, b, rng):
@@ -430,8 +439,10 @@ def fed_round_fused(rounds):
         return jax.jit(f).lower(params, batch,
                                 jax.random.PRNGKey(1)).compile().as_text()
 
-    n_extract = client_hlo(feds["extract"], False).count(sub_shape)
-    n_fused = client_hlo(feds["fused"], True).count(sub_shape)
+    hlo_extract = client_hlo(feds["extract"], False)
+    hlo_fused = client_hlo(feds["fused"], True)
+    n_extract = sum(hlo_extract.count(s) for s in sub_shapes)
+    n_fused = sum(hlo_fused.count(s) for s in sub_shapes)
     emit("fed_round_fused", "extract_client_wsub_stacks", n_extract)
     emit("fed_round_fused", "fused_client_wsub_stacks", n_fused)
     emit("fed_round_fused", "fused_no_wsub_alloc", int(n_fused == 0))

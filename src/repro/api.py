@@ -130,14 +130,20 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
       capacities: mask mode only — per-client ``[C]`` fractions; defaults
         to ``scfg.capacity`` for every client.
       fused_forward: window mode only — ``"auto"`` (default) routes the
-        client phase through the fused rolling-window forward (no
-        extract/scatter, no W_sub copy; the model's MLP stack reads only
-        the active d_ff window from HBM) whenever the model exposes a
-        window-aware ``loss(params, batch, window=...)``, the scheme
-        shares one window across clients, and only ``d_ff`` is windowed.
-        ``"on"``/True forces it (error when unavailable), ``"off"``/False
-        keeps the extract-based client phase.  Fused and extract rounds
-        are bitwise-equal on f32 (property-tested).
+        client phase through the fused multi-axis window forward (no
+        extract/scatter, no W_sub copy; the model reads only the active
+        windows from HBM) whenever the model exposes a window-aware
+        ``loss(params, batch, window=...)``, the scheme shares one window
+        across clients, and every properly-windowed axis has a fused
+        forward: ``d_ff`` (MLP/MTP), GQA-coupled ``heads``/``kv_heads``
+        (windowed q/k/v/o projections), ``experts`` and ``moe_d_ff`` (MoE
+        routing + per-expert/shared MLPs) — the full default
+        ``SubmodelConfig.axes`` tuple on GQA/MoE transformer families.
+        ``ssm_heads`` (SSM/hybrid models) and MLA's uncoupled ``heads``
+        have no fused arm yet: ``"auto"`` falls back to extract there.
+        ``"on"``/True forces fusion (error when unavailable),
+        ``"off"``/False keeps the extract-based client phase.  Fused and
+        extract rounds are bitwise-equal on f32 (property-tested).
 
     Returns a :class:`WindowFedAvg` or :class:`MaskFedAvg` whose ``round``
     signature is identical across modes (mask mode additionally accepts

@@ -85,11 +85,12 @@ class WindowFedAvg:
     client_opt: Optional[ClientOpt] = None  # None = the paper's plain SGD
     server_opt: Any = None              # ServerOpt used by Trainer (optional)
     shared_window: Optional[bool] = None  # None = resolve from scfg
-    # Fused rolling-window forward: clients skip extract/scatter entirely
-    # and run K steps on the FULL tree through a window-aware model forward
-    # (loss_fn(params, batch, window=(offset, win))).  "auto" takes the
-    # fused arm whenever a windowed loss is attached, the scheme shares a
-    # window, and exactly one proper d_ff window is in play.
+    # Fused multi-axis window forward: clients skip extract/scatter
+    # entirely and run K steps on the FULL tree through a window-aware
+    # model forward (loss_fn(params, batch, window={axis: (offset, win)})).
+    # "auto" takes the fused arm whenever a windowed loss is attached, the
+    # scheme shares a window, and every properly-windowed axis has a fused
+    # forward (d_ff, GQA-coupled heads/kv_heads, experts, moe_d_ff).
     windowed_loss_fn: Optional[Callable] = None
     fused_forward: Any = "auto"         # "auto" | True/"on" | False/"off"
 
@@ -107,7 +108,13 @@ class WindowFedAvg:
             raise ValueError(
                 f"fused_forward must be 'auto', 'on'/True or 'off'/False; "
                 f"got {want!r}")
-        keys = list(self.scheme.sizes)
+        # axes the fused window-aware forward can express; everything else
+        # falls back to extract/scatter (lazy import, like _fused_window)
+        from repro.models.layers import WindowMap
+        supported = WindowMap.SUPPORTED
+        # proper windows only (size < full dim): improper ones are no-ops
+        # for extract and must be no-ops for the fused forward too.
+        proper = {k: w for k, w in self.scheme.sizes.items() if w < k[1]}
         reasons = []
         if self.windowed_loss_fn is None:
             reasons.append("the model exposes no windowed forward "
@@ -115,26 +122,42 @@ class WindowFedAvg:
         if not self.shared_window:
             reasons.append("the scheme does not share one window across "
                            "clients")
-        if not (len(keys) == 1 and keys[0][0] == "d_ff"
-                and self.scheme.sizes[keys[0]] < keys[0][1]):
-            reasons.append("the windowed axes are not exactly one proper "
-                           f"d_ff window (got {keys})")
+        if not proper:
+            reasons.append("no axis is actually windowed (nothing to fuse)")
+        unsupported = [k for k in proper if k[0] not in supported]
+        if unsupported:
+            reasons.append(f"axes {sorted(unsupported)} have no fused "
+                           f"window-aware forward (supported: "
+                           f"{supported})")
+        # GQA coupling: a heads window must be derived from kv_heads so the
+        # windowed q heads keep grouping onto the windowed kv heads.
+        uncoupled = [k for k in proper
+                     if k[0] == "heads" and k not in self.scheme.derived]
+        if uncoupled:
+            reasons.append(f"heads windows {sorted(uncoupled)} are not "
+                           "GQA-derived from a kv_heads window")
         if reasons:
             if want in (True, "on"):
                 raise ValueError("fused_forward=True requires: "
                                  + "; ".join(reasons))
             return False
-        key = keys[0]
-        win = self.scheme.sizes[key]
-        # A traced offset may take the fused Pallas arm only when every
-        # offset the scheme can produce lands on the kernel block boundary
-        # (the exact-tail grid entry breaks this when (n - w) % block != 0).
-        block = min(128, win)
-        self._fused_key = key
-        self._fused_assume_aligned = (
-            True if self.scfg.scheme == "static"
-            else self.scheme.grid_aligned(key, block))
+        # Per-axis static alignment certificates: a traced offset may take
+        # the fused Pallas arm only when every offset the scheme can
+        # produce lands on the kernel block boundary (the exact-tail grid
+        # entry breaks this when (n - w) % block != 0) — threaded through
+        # AxisWindow.mult and checked per use site (head windows scale by
+        # head_dim before the check).
+        self._fused_keys = proper
+        self._fused_mults = {k: self.scheme.grid_multiple(k) for k in proper}
         return True
+
+    def _fused_window(self, offsets):
+        """The per-axis WindowMap for one round's shared offsets."""
+        from repro.models.layers import AxisWindow, WindowMap
+        return WindowMap(
+            {k: AxisWindow(offsets[k][0], w, self._fused_mults[k])
+             for k, w in self._fused_keys.items()},
+            backend=self.kernel_backend)
 
     def _vmap(self, f, **kw):
         if self.spmd_axis is not None:
@@ -187,20 +210,21 @@ class WindowFedAvg:
         return sub0, delta, losses
 
     def _client_phase_fused(self, params, batch, offsets):
-        """Fused rolling-window client phase: K steps on the FULL tree.
+        """Fused multi-axis window client phase: K steps on the FULL tree.
 
         No ``extract``/``scatter_delta`` and no compact W_sub copy: the
-        model's window-aware forward (``mlp_apply_rolling`` through the
-        ``dispatch.rolling_matmul`` custom VJP) reads only the active d_ff
-        window from HBM, and out-of-window coordinates see an exactly-zero
-        gradient, so their K-step delta is exactly 0.  Returns the
-        FULL-shaped f32 delta (consumed by the ``*_fused`` aggregations).
+        model's window-aware forward (``mlp_apply_rolling`` /
+        ``_head_proj`` through the ``dispatch.rolling_matmul`` custom VJP,
+        windowed expert slices in the MoE block) reads only the active
+        windows from HBM, and out-of-window coordinates of every windowed
+        axis see an exactly-zero gradient, so their K-step delta is
+        exactly 0.  Returns the FULL-shaped f32 delta (consumed by the
+        ``*_fused`` aggregations, which slice/scatter the multi-axis
+        window like the extract path does).
         """
         c = self.scfg
         C = c.clients_per_round
-        key = self._fused_key
-        window = (offsets[key][0], self.scheme.sizes[key],
-                  self.kernel_backend, self._fused_assume_aligned)
+        window = self._fused_window(offsets)
         full0 = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
         full0 = constrain_tree(full0, self.axes_tree)

@@ -31,6 +31,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import SubmodelConfig
 
@@ -106,12 +107,22 @@ class WindowScheme:
             out[k] = out[src] * group
         return out
 
-    def grid_aligned(self, key: AxisKey, block: int) -> bool:
-        """True when every grid offset of ``key`` is a multiple of ``block``
-        — the condition under which a *traced* offset may take the fused
-        Pallas arm (``assume_aligned=True``).  The exact-tail grid entry
-        (kept for coverage) makes this False whenever (n - w) % block != 0."""
-        return bool(jnp.all(self.grids[key] % block == 0))
+    def grid_multiple(self, key: AxisKey) -> int:
+        """Static alignment certificate for the fused multi-axis arm: the
+        gcd of every offset the scheme can produce for ``key`` (0 when the
+        offset is always 0).  Derived axes inherit their primary's
+        certificate scaled by the GQA group; a use site scaling the axis
+        (head windows flatten to ``win * head_dim`` columns) multiplies it
+        by the same factor before checking the kernel block boundary —
+        cf. ``AxisWindow.aligned``."""
+        if key in self.derived:
+            src, group = self.derived[key]
+            return self.grid_multiple(src) * group
+        if self.cfg.scheme in ("full", "static"):
+            return 0
+        if self.cfg.scheme == "random":
+            return max(self.cfg.align, 1)  # offsets are align multiples
+        return int(np.gcd.reduce(np.asarray(self.grids[key])))
 
     def offsets(self, rng, round_idx, n_clients) -> Dict[AxisKey, jnp.ndarray]:
         """Per-client offsets {axis: [C] int32} for this round."""

@@ -214,7 +214,7 @@ def rolling_matmul(x, w, offset, win, backend=None, bm=128, bn=128, bk=128,
     and — because the kernels floor-round the offset to a block boundary —
     for *traced* offsets unless ``assume_aligned=True`` (pass it when every
     offset the scheme can produce is a multiple of the block width, cf.
-    ``WindowScheme.grid_aligned``).
+    ``WindowScheme.grid_multiple`` / ``AxisWindow.aligned``).
 
     Registered with a custom VJP: ``dx = dy @ w[:, off:off+win]^T`` via the
     offset-prefetch backward kernel (``kernels.rolling_matmul_bwd``), ``dW``

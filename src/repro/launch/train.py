@@ -44,9 +44,12 @@ def main():
     ap.add_argument("--fused-forward", default="auto",
                     choices=["auto", "on", "off"],
                     help="window mode: run the client phase through the "
-                         "fused rolling-window forward (no extract/scatter, "
-                         "no W_sub copy) when the scheme shares a window "
-                         "and only d_ff is windowed; 'on' forces it, 'off' "
+                         "fused multi-axis window forward (no extract/"
+                         "scatter, no W_sub copy) when the scheme shares a "
+                         "window and every windowed axis has a fused arm "
+                         "(d_ff, GQA-coupled heads/kv_heads, experts, "
+                         "moe_d_ff; ssm_heads and MLA heads fall back to "
+                         "extract under 'auto'); 'on' forces it, 'off' "
                          "keeps the extract-based client phase")
     ap.add_argument("--client-opt", default="sgd",
                     choices=sorted(api.CLIENT_OPTS),
@@ -64,9 +67,9 @@ def main():
                          "(default: the REPRO_NO_SHARED_WINDOW env var)")
     ap.add_argument("--axes", nargs="+", default=None,
                     help="semantic axes to window (default: the "
-                         "SubmodelConfig default tuple); e.g. "
-                         "'--axes d_ff' is the shape the fused forward "
-                         "requires")
+                         "SubmodelConfig default tuple — fully fused on "
+                         "GQA/MoE transformer families; ssm/MLA-head axes "
+                         "use the extract path)")
     ap.add_argument("--capacity", type=float, default=0.5)
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=4)

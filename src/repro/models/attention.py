@@ -233,10 +233,34 @@ def cp_decode_attention(mesh, q, k, v, valid, axis="data", softmax_scale=None):
 # ---------------------------------------------------------------------------
 
 
-def _qkv(p, x, cfg, positions):
-    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
-    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
-    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+def _head_proj(x, w, spec, backend=None):
+    """``x [B,S,D] @ w [D,H,hd]`` restricted to the contiguous head window
+    ``spec`` (an ``AxisWindow`` in head units) — ``dispatch.rolling_matmul``
+    on the head-flattened ``[D, H*hd]`` layout, so the inactive heads'
+    columns are never read from HBM and the custom VJP scatter-adds ``dW``
+    back into the full layout (exact zeros outside the window)."""
+    if spec is None:
+        return jnp.einsum("bsd,dhe->bshe", x, w)
+    from repro.kernels.dispatch import rolling_matmul  # lazy: no import cycle
+    D, H, hd = w.shape
+    lead = x.shape[:-1]
+    win = spec.win * hd
+    y = rolling_matmul(x.reshape(-1, D), w.reshape(D, H * hd),
+                       spec.offset * hd, win, backend=backend,
+                       assume_aligned=spec.aligned(min(128, win), hd))
+    return y.reshape(*lead, spec.win, hd)
+
+
+def _qkv(p, x, cfg, positions, window=None):
+    """q/k/v projections; ``window`` (a ``WindowMap`` or None) windows the
+    q/o heads and the k/v kv-heads independently — GQA coupling (derived
+    ``heads = kv_heads * group`` offsets) is the scheme's job upstream."""
+    hspec = window.get("heads", p["wq"].shape[1]) if window else None
+    kvspec = window.get("kv_heads", p["wk"].shape[1]) if window else None
+    bk = window.backend if window else None
+    q = _head_proj(x, p["wq"], hspec, bk)
+    k = _head_proj(x, p["wk"], kvspec, bk)
+    v = _head_proj(x, p["wv"], kvspec, bk)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -249,8 +273,8 @@ def _qkv(p, x, cfg, positions):
 _USE_FLASH = bool(os.environ.get("REPRO_USE_FLASH"))
 
 
-def gqa_train(p, x, cfg, positions, q_chunk=0, kv_chunk=0):
-    q, k, v = _qkv(p, x, cfg, positions)
+def gqa_train(p, x, cfg, positions, q_chunk=0, kv_chunk=0, window=None):
+    q, k, v = _qkv(p, x, cfg, positions, window=window)
     if _USE_FLASH:
         # Pallas flash kernel (VMEM-resident online softmax) — the TPU
         # deployment path; interpret-mode on CPU hosts (see §Perf C3).
@@ -263,7 +287,14 @@ def gqa_train(p, x, cfg, positions, q_chunk=0, kv_chunk=0):
         out = blockwise_attention(q, k, v, causal=True,
                                   window=cfg.sliding_window,
                                   q_chunk=q_chunk, kv_chunk=kv_chunk)
-    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    wo = p["wo"]
+    hspec = window.get("heads", wo.shape[0]) if window else None
+    if hspec is not None:
+        # the contraction runs over the active heads only: slice the output
+        # projection rows to the window (grads scatter back as exact zeros
+        # outside — the dynamic_slice transpose)
+        wo = jax.lax.dynamic_slice_in_dim(wo, hspec.offset, hspec.win, 0)
+    return jnp.einsum("bshe,hed->bsd", out, wo)
 
 
 def gqa_prefill(p, x, cfg, positions, cache_len):

@@ -24,18 +24,60 @@ import jax.numpy as jnp
 import numpy as np
 
 
-class MLPWindow(NamedTuple):
-    """Active ``d_ff`` window for the fused rolling-window forward.
+class AxisWindow(NamedTuple):
+    """Active window of ONE windowed semantic axis, in axis units.
 
-    ``offset`` may be traced (per-round), ``win`` is static (SPMD shapes);
-    ``backend``/``assume_aligned`` are the ``dispatch.rolling_matmul`` knobs
-    threaded from the fed round.  ``Model.forward(..., window=(offset, win))``
-    accepts a bare tuple and normalizes it to this."""
+    ``offset`` may be traced (per-round), ``win`` is static (SPMD shapes).
+    ``mult`` is a static alignment certificate: every offset the window
+    scheme can produce is a multiple of it (``0`` means the offset is
+    always 0; ``1`` — the conservative default — promises nothing).  Sites
+    that flatten the axis (head windows become column windows of width
+    ``win * head_dim``) scale it via :meth:`aligned` to decide whether a
+    *traced* offset may take the fused Pallas arm of
+    ``dispatch.rolling_matmul``."""
 
     offset: Any
     win: int
-    backend: Optional[str] = None
-    assume_aligned: bool = False
+    mult: int = 1
+
+    def aligned(self, block: int, scale: int = 1) -> bool:
+        """True when every producible offset (scaled by ``scale``) provably
+        lands on a ``block`` boundary — the ``assume_aligned`` contract."""
+        m = self.mult * scale
+        return True if self.mult == 0 else (m % block == 0)
+
+
+class WindowMap:
+    """Per-axis windows for the fused multi-axis forward.
+
+    Maps ``(axis_name, full_dim_size)`` — the same :data:`AxisKey` the
+    window scheme uses — to an :class:`AxisWindow`, plus the kernel-dispatch
+    ``backend`` shared by every windowed matmul.  Keyed by *(name, size)*
+    rather than name alone because one semantic axis can appear at several
+    sizes (MoE ``moe_d_ff``: per-expert width vs ``n_shared * width``), each
+    with its own window plan.  Model code resolves windows from the actual
+    weight shapes (``window.get(name, w.shape[d])``), mirroring how
+    ``core.extract`` matches windowed dims."""
+
+    SUPPORTED = ("d_ff", "heads", "kv_heads", "experts", "moe_d_ff")
+
+    def __init__(self, windows, backend: Optional[str] = None):
+        self.windows = {}
+        for key, spec in dict(windows).items():
+            name, size = key
+            if name not in self.SUPPORTED:
+                raise ValueError(
+                    f"axis {name!r} has no window-aware forward; fused "
+                    f"windows support {self.SUPPORTED}")
+            if not isinstance(spec, AxisWindow):
+                spec = AxisWindow(*spec)
+            self.windows[(name, int(size))] = spec
+        self.backend = backend
+
+    def get(self, name: str, size) -> Optional[AxisWindow]:
+        """Window for axis ``name`` at full size ``size`` (None = no
+        window: the site runs its plain full-width path)."""
+        return self.windows.get((name, int(size)))
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +225,14 @@ def mlp_apply_rolling(p, x, offset, win, act="silu", backend=None,
     w_down = jax.lax.dynamic_slice_in_dim(p["w_down"], offset, win, axis=0)
     out = (g * u) @ w_down
     return out.reshape(*lead, out.shape[-1])
+
+
+def mlp_apply_windowed(p, x, spec: AxisWindow, act="silu", backend=None):
+    """:func:`mlp_apply_rolling` driven by an :class:`AxisWindow` spec (the
+    alignment certificate decides the traced-offset Pallas arm)."""
+    return mlp_apply_rolling(p, x, spec.offset, spec.win, act,
+                             backend=backend,
+                             assume_aligned=spec.aligned(min(128, spec.win)))
 
 
 # ---------------------------------------------------------------------------

@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ParamBuilder, act_fn
+from repro.models.layers import (ParamBuilder, act_fn, mlp_apply_windowed)
 from repro.sharding.ctx import constrain
 
 
@@ -43,12 +43,12 @@ def moe_params(b: ParamBuilder, prefix, cfg, layers=0):
                 layers=layers)
 
 
-def _route(p, x, cfg):
+def _route(router, x, cfg):
     """x [T,D] -> (weights [T,k], idx [T,k], aux_loss)."""
     mo = cfg.moe
-    E = p["router"].shape[-1]          # may be a sub-model window of experts
+    E = router.shape[-1]               # may be a sub-model window of experts
     k = min(mo.top_k, E)
-    logits = (x @ p["router"]).astype(jnp.float32)     # [T,E]
+    logits = (x @ router).astype(jnp.float32)          # [T,E]
     if mo.router == "sigmoid":
         scores = jax.nn.sigmoid(logits)
         w, idx = jax.lax.top_k(scores, k)
@@ -63,26 +63,55 @@ def _route(p, x, cfg):
     return w.astype(x.dtype), idx, aux
 
 
-def _expert_ffn(wg, wu, wd, x, act):
-    g = act_fn(act)(jnp.einsum("ecd,edf->ecf", x, wg))
-    u = jnp.einsum("ecd,edf->ecf", x, wu)
-    return jnp.einsum("ecf,efd->ecd", g * u, wd)
+def _expert_ffn(wg, wu, wd, x, act, fspec=None, backend=None):
+    """Per-expert gated MLPs.  ``fspec`` (an ``AxisWindow`` over the
+    per-expert hidden width ``moe_d_ff``) routes every expert through the
+    fused rolling-window MLP on the FULL weights — only the active window's
+    columns are read, grads outside it are exactly zero."""
+    if fspec is None:
+        g = act_fn(act)(jnp.einsum("ecd,edf->ecf", x, wg))
+        u = jnp.einsum("ecd,edf->ecf", x, wu)
+        return jnp.einsum("ecf,efd->ecd", g * u, wd)
+    return jax.vmap(lambda wg_e, wu_e, wd_e, x_e: mlp_apply_windowed(
+        {"w_gate": wg_e, "w_up": wu_e, "w_down": wd_e}, x_e, fspec, act,
+        backend=backend))(wg, wu, wd, x)
 
 
-def moe_apply(p, x, cfg, path="dropping"):
-    """x [B,S,D] -> (out [B,S,D], aux_loss scalar)."""
+def moe_apply(p, x, cfg, path="dropping", window=None):
+    """x [B,S,D] -> (out [B,S,D], aux_loss scalar).
+
+    ``window`` (a ``WindowMap``, or None) applies the fused sub-model
+    windows on the FULL weights: an ``experts`` window slices the router
+    columns and the expert stacks to the active contiguous expert range
+    (routing then runs over that sub-zoo, exactly like the extracted
+    compact model), and a ``moe_d_ff`` window routes the per-expert and
+    shared MLPs through the rolling-window matmul."""
     B, S, D = x.shape
     xt = x.reshape(B * S, D)
-    w, idx, aux = _route(p, xt, cfg)
     mo = cfg.moe
-    E = p["router"].shape[-1]
+    router, wg, wu, wd = p["router"], p["w_gate"], p["w_up"], p["w_down"]
+    espec = window.get("experts", router.shape[-1]) if window else None
+    if espec is not None:
+        router = jax.lax.dynamic_slice_in_dim(router, espec.offset,
+                                              espec.win, 1)
+        wg = jax.lax.dynamic_slice_in_dim(wg, espec.offset, espec.win, 0)
+        wu = jax.lax.dynamic_slice_in_dim(wu, espec.offset, espec.win, 0)
+        wd = jax.lax.dynamic_slice_in_dim(wd, espec.offset, espec.win, 0)
+    fspec = window.get("moe_d_ff", wg.shape[-1]) if window else None
+    backend = window.backend if window else None
+    w, idx, aux = _route(router, xt, cfg)
+    E = router.shape[-1]
     k = idx.shape[-1]
     T = xt.shape[0]
 
     if path == "dense":
-        g = act_fn(cfg.act)(jnp.einsum("td,edf->tef", xt, p["w_gate"]))
-        u = jnp.einsum("td,edf->tef", xt, p["w_up"])
-        y_all = jnp.einsum("tef,efd->ted", g * u, p["w_down"])  # [T,E,D]
+        if fspec is not None:  # dense path: slice the window (test oracle)
+            wg = jax.lax.dynamic_slice_in_dim(wg, fspec.offset, fspec.win, 2)
+            wu = jax.lax.dynamic_slice_in_dim(wu, fspec.offset, fspec.win, 2)
+            wd = jax.lax.dynamic_slice_in_dim(wd, fspec.offset, fspec.win, 1)
+        g = act_fn(cfg.act)(jnp.einsum("td,edf->tef", xt, wg))
+        u = jnp.einsum("td,edf->tef", xt, wu)
+        y_all = jnp.einsum("tef,efd->ted", g * u, wd)           # [T,E,D]
         gate = jnp.zeros((T, E), xt.dtype)
         gate = jax.vmap(lambda gt, it, wt: gt.at[it].add(wt))(gate, idx, w)
         out = jnp.einsum("ted,te->td", y_all, gate)
@@ -108,7 +137,8 @@ def moe_apply(p, x, cfg, path="dropping"):
         # routes tokens with one all-to-all-ish exchange instead of
         # re-gathering the token matrix per expert shard
         xin = constrain(xin.reshape(E, C, D), "experts", None, None)
-        y = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], xin, cfg.act)
+        y = _expert_ffn(wg, wu, wd, xin, cfg.act, fspec=fspec,
+                        backend=backend)
         y = constrain(y, "experts", None, None)
         # combine: weighted scatter-add back to tokens
         y_flat = y.reshape(E * C, D)[slot]             # [T*k, D]
@@ -117,6 +147,12 @@ def moe_apply(p, x, cfg, path="dropping"):
 
     if mo.n_shared:
         sp = p["shared"]
-        g = act_fn(cfg.act)(xt @ sp["w_gate"])
-        out = out + (g * (xt @ sp["w_up"])) @ sp["w_down"]
+        sspec = (window.get("moe_d_ff", sp["w_gate"].shape[-1])
+                 if window else None)
+        if sspec is not None:  # shared width n_shared*F windows separately
+            out = out + mlp_apply_windowed(sp, xt, sspec, cfg.act,
+                                           backend=backend)
+        else:
+            g = act_fn(cfg.act)(xt @ sp["w_gate"])
+            out = out + (g * (xt @ sp["w_up"])) @ sp["w_down"]
     return out.reshape(B, S, D).astype(x.dtype), aux * mo.aux_loss_weight

@@ -21,9 +21,9 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (MLPWindow, ParamBuilder, mlp_apply,
-                                 mlp_apply_rolling, mlp_params, rms_norm,
-                                 sinusoidal_positions, softmax_xent)
+from repro.models.layers import (AxisWindow, ParamBuilder, WindowMap,
+                                 mlp_apply, mlp_apply_windowed, mlp_params,
+                                 rms_norm, sinusoidal_positions, softmax_xent)
 from repro.sharding.ctx import constrain
 
 
@@ -105,8 +105,17 @@ def build_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Tuple[Dict, Dict]:
 
 
 def _attn_any(p, x, cfg, positions, mode, cache=None, pos=None, mesh=None,
-              cp=False, valid=None, rope_pos=None):
+              cp=False, valid=None, rope_pos=None, window=None):
     if cfg.mla is not None:
+        if window is not None and (
+                window.get("heads", cfg.n_heads) is not None
+                or window.get("kv_heads", cfg.n_kv_heads) is not None):
+            # MLA's per-head up-projections have no GQA grouping to couple
+            # a window to — refuse rather than silently train full heads.
+            raise ValueError(
+                "fused head/kv_head windows are not supported for MLA "
+                "attention; window d_ff/moe_d_ff only, or use the "
+                "extract-based round (fused_forward='off')")
         if mode == "train":
             return attn.mla_train(p, x, cfg, positions), None
         if mode == "prefill":
@@ -114,7 +123,7 @@ def _attn_any(p, x, cfg, positions, mode, cache=None, pos=None, mesh=None,
         return attn.mla_decode(p, x, cfg, cache, pos, mesh=mesh, cp=cp,
                                valid_override=valid, rope_pos=rope_pos)
     if mode == "train":
-        return attn.gqa_train(p, x, cfg, positions), None
+        return attn.gqa_train(p, x, cfg, positions, window=window), None
     if mode == "prefill":
         S = x.shape[1]
         clen = min(S, cfg.sliding_window) if cfg.sliding_window else S
@@ -128,9 +137,11 @@ def block_apply(p, h, cfg, stack, positions, mode="train", cache=None,
                 valid=None, rope_pos=None, window=None):
     """One layer.  Returns (h, aux_loss, new_cache_layer).
 
-    ``window`` (an :class:`MLPWindow`, or None) routes the MLP through the
-    fused rolling-window forward on the FULL weights — only the active
-    ``d_ff`` window is read from HBM, no compact W_sub copy exists."""
+    ``window`` (a :class:`WindowMap`, or None) routes every windowed
+    matmul through the fused sub-model forward on the FULL weights — MLP
+    ``d_ff`` columns, attention ``heads``/``kv_heads`` projections, MoE
+    ``experts``/``moe_d_ff`` — so only the active windows are read from
+    HBM and no compact W_sub copy exists."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     x = rms_norm(h, p["ln1"], cfg.norm_eps)
@@ -145,7 +156,7 @@ def block_apply(p, h, cfg, stack, positions, mode="train", cache=None,
             new_cache.update(c)
         return h + out, aux, new_cache
     a, acache = _attn_any(p["attn"], x, cfg, positions, mode, cache, pos,
-                          mesh, cp, valid, rope_pos)
+                          mesh, cp, valid, rope_pos, window)
     if acache:
         new_cache.update(acache)
     if cfg.hybrid:
@@ -163,13 +174,16 @@ def block_apply(p, h, cfg, stack, positions, mode="train", cache=None,
     h = h + constrain(a, "batch", "seq", "d_model")
     x2 = rms_norm(h, p["ln2"], cfg.norm_eps)
     if stack == "moe_layers":
-        out, aux = moe_mod.moe_apply(p["moe"], x2, cfg, path=moe_path)
-    elif window is not None:
-        out = mlp_apply_rolling(p["mlp"], x2, window.offset, window.win,
-                                cfg.act, backend=window.backend,
-                                assume_aligned=window.assume_aligned)
+        out, aux = moe_mod.moe_apply(p["moe"], x2, cfg, path=moe_path,
+                                     window=window)
     else:
-        out = mlp_apply(p["mlp"], x2, cfg.act)
+        spec = (window.get("d_ff", p["mlp"]["w_gate"].shape[-1])
+                if window is not None else None)
+        if spec is not None:
+            out = mlp_apply_windowed(p["mlp"], x2, spec, cfg.act,
+                                     backend=window.backend)
+        else:
+            out = mlp_apply(p["mlp"], x2, cfg.act)
     h = h + constrain(out, "batch", "seq", "d_model")
     return h, aux, new_cache
 
@@ -277,14 +291,28 @@ class Model:
                 new_caches[stack] = ys
         return h, aux_total, new_caches
 
+    def _norm_window(self, window):
+        """Normalize ``window`` to a :class:`WindowMap` (or None).
+
+        Accepted forms: a ``WindowMap``; a ``{(axis_name, full_size):
+        (offset, win) | AxisWindow}`` mapping; or the legacy single-axis
+        ``(offset, win)`` tuple, meaning a bare ``d_ff`` window."""
+        if window is None or isinstance(window, WindowMap):
+            return window
+        if isinstance(window, dict):
+            return WindowMap(window)
+        offset, win = window
+        return WindowMap({("d_ff", self.cfg.d_ff): AxisWindow(offset, win)})
+
     # -- entry points ---------------------------------------------------------
     def forward(self, params, tokens, extra=None, window=None):
-        """``window=(offset, win)`` (or an :class:`MLPWindow`) runs every MLP
-        block through the fused rolling-window forward on the full weights —
-        the window-mode training path without compact extraction."""
+        """``window`` (see :meth:`_norm_window`) runs every windowed block
+        — MLP ``d_ff``, attention ``heads``/``kv_heads``, MoE
+        ``experts``/``moe_d_ff`` — through the fused sub-model forward on
+        the full weights: the window-mode training path without compact
+        extraction."""
         cfg = self.cfg
-        if window is not None and not isinstance(window, MLPWindow):
-            window = MLPWindow(*window)
+        window = self._norm_window(window)
         h = self._embed(params, tokens, extra)
         B, S = h.shape[0], h.shape[1]
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
@@ -297,8 +325,7 @@ class Model:
         """batch: tokens [B,S] (or [B,S,CB]); optional patches, mask.
         ``window``: see :meth:`forward` (threaded to the MTP block too)."""
         cfg = self.cfg
-        if window is not None and not isinstance(window, MLPWindow):
-            window = MLPWindow(*window)
+        window = self._norm_window(window)
         tokens = batch["tokens"]
         logits, aux, h = self.forward(params, tokens, batch, window=window)
         P = cfg.vision_patches if (cfg.vision_stub and "patches" in batch) \

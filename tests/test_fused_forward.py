@@ -1,11 +1,14 @@
-"""The fused rolling-window forward (tentpole property tests).
+"""The fused multi-axis window forward (tentpole property tests).
 
-When ``WindowFedAvg`` resolves a shared window and only ``d_ff`` is
-windowed, the client phase skips extract/scatter entirely: clients run K
-steps on the FULL tree through the window-aware ``Model.forward`` whose MLP
-blocks call ``mlp_apply_rolling``.  The fused round must be **bitwise
-equal (f32, 0 ulp)** to the extract-based round — pinned here across
-schemes, optimizers, backends, and the unaligned exact-tail grid entry.
+When ``WindowFedAvg`` resolves a shared window and every properly-windowed
+axis has a fused forward (``d_ff``, GQA-coupled ``heads``/``kv_heads``,
+``experts``, ``moe_d_ff``), the client phase skips extract/scatter
+entirely: clients run K steps on the FULL tree through the window-aware
+``Model.forward`` (``mlp_apply_rolling``, the head-flattened
+``_head_proj``, windowed MoE routing/experts).  The fused round must be
+**bitwise equal (f32, 0 ulp)** to the extract-based round — pinned here
+across schemes, multi-axis combinations, model families, optimizers,
+backends, and the unaligned exact-tail grid entry.
 """
 from dataclasses import replace
 
@@ -18,6 +21,7 @@ from repro import api
 from repro.configs.base import SubmodelConfig, get_reduced_config
 from repro.data.synthetic import lm_batches
 from repro.models import build_model
+from repro.models.layers import AxisWindow, WindowMap
 
 
 def _tiny_model(d_ff=128):
@@ -65,6 +69,63 @@ def test_fused_round_bitwise_equals_extract(scheme):
         params = pf
 
 
+# -- the tentpole acceptance: multi-axis fused == extract, 0 ulp ---------------
+
+
+# (arch, axes) matrix: GQA-coupled heads/kv_heads, MoE per-expert +
+# experts windows, MLA/MTP/shared-expert composition, and the full default
+# SubmodelConfig.axes tuple (axes=None) on two model-zoo families.
+MULTI_AXIS = [
+    ("tinyllama_1_1b", ("d_ff", "kv_heads", "heads")),
+    ("tinyllama_1_1b", None),               # full default axes tuple
+    ("mixtral_8x22b", ("moe_d_ff",)),
+    ("mixtral_8x22b", None),                # + experts + GQA heads
+    ("deepseek_v3_671b", ("d_ff", "moe_d_ff")),  # MLA + shared + MTP
+]
+
+
+@pytest.mark.parametrize("arch,axes", MULTI_AXIS)
+def test_fused_multi_axis_bitwise_equals_extract(arch, axes):
+    cfg = replace(get_reduced_config(arch), n_layers=2)
+    m = build_model(cfg, remat=False)
+    params = m.init(jax.random.PRNGKey(0))
+    kw = {"axes": axes} if axes else {}
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.1, **kw)
+    fused, extract = _pair(m, scfg)
+    assert fused.use_fused and not extract.use_fused
+    batch = _batch(cfg)
+    step_f, step_e = jax.jit(fused.round), jax.jit(extract.round)
+    for r in range(2):
+        pf, mf = step_f(params, batch, r, jax.random.PRNGKey(1))
+        pe, me = step_e(params, batch, r, jax.random.PRNGKey(1))
+        assert _maxdelta(pf, pe) == 0.0, \
+            f"{arch}/{axes} round {r} not bitwise equal"
+        np.testing.assert_array_equal(np.asarray(mf["client_loss"]),
+                                      np.asarray(me["client_loss"]))
+        params = pf
+
+
+@pytest.mark.parametrize("arch,windowed", [
+    ("tinyllama_1_1b", {"d_ff", "kv_heads", "heads"}),
+    ("mixtral_8x22b", {"kv_heads", "heads", "experts", "moe_d_ff"}),
+])
+def test_resolve_fused_full_default_axes(arch, windowed):
+    """Acceptance pin: _resolve_fused returns True for the full default
+    SubmodelConfig.axes tuple under a shared window, covering every
+    windowed axis the model actually has."""
+    cfg = replace(get_reduced_config(arch), n_layers=2)
+    m = build_model(cfg, remat=False)
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4)   # default axes tuple
+    fed = api.fed_round(m, scfg)
+    assert fed.use_fused
+    assert {k[0] for k in fed._fused_keys} == windowed
+    # GQA coupling: the heads window is derived from kv_heads
+    heads = [k for k in fed._fused_keys if k[0] == "heads"]
+    assert all(k in fed.scheme.derived for k in heads)
+
+
 def test_fused_round_bitwise_on_unaligned_tail():
     """align=8 with d_ff=100 puts the exact-tail offset (52) off the
     alignment grid — the fused arm must drop to the oracle matmul there and
@@ -76,7 +137,12 @@ def test_fused_round_bitwise_on_unaligned_tail():
                           axes=("d_ff",), align=8)
     fused, extract = _pair(m, scfg)
     assert fused.use_fused
-    assert not fused._fused_assume_aligned  # tail entry breaks alignment
+    # the tail entry breaks the alignment certificate: a traced offset must
+    # NOT be allowed onto the fused Pallas arm for this grid
+    key = ("d_ff", 100)
+    win = fused.scheme.sizes[key]
+    spec = AxisWindow(0, win, fused._fused_mults[key])
+    assert not spec.aligned(min(128, win))
     batch = _batch(cfg)
     step_f, step_e = jax.jit(fused.round), jax.jit(extract.round)
     R = fused.scheme.n_windows
@@ -153,11 +219,18 @@ def test_fused_auto_resolution():
                               clients_per_round=4, axes=("d_ff",))
     multi = replace(only_dff, axes=("d_ff", "heads", "kv_heads"))
     assert api.fed_round(m, only_dff).use_fused
-    # multiple windowed axes -> extract path
-    assert not api.fed_round(m, multi).use_fused
-    # forcing it on a multi-axis scheme must refuse loudly
-    with pytest.raises(ValueError, match="d_ff"):
-        api.fed_round(m, multi, fused_forward="on")
+    # multi-axis windows (GQA-coupled heads) fuse too now
+    assert api.fed_round(m, multi).use_fused
+    # an uncoupled heads window (no kv_heads to derive from) cannot fuse
+    uncoupled = replace(only_dff, axes=("d_ff", "heads"))
+    assert not api.fed_round(m, uncoupled).use_fused
+    with pytest.raises(ValueError, match="GQA-derived"):
+        api.fed_round(m, uncoupled, fused_forward="on")
+    # an axis with no fused forward (d_model) falls back to extract
+    unsupported = replace(only_dff, axes=("d_ff", "d_model"))
+    assert not api.fed_round(m, unsupported).use_fused
+    with pytest.raises(ValueError, match="no fused window-aware forward"):
+        api.fed_round(m, unsupported, fused_forward="on")
     # a raw triple fuses iff its loss_fn is window-aware
     triple = (m.loss, m.abstract_params(), m.axes())
     assert api.fed_round(triple, only_dff).use_fused
@@ -195,3 +268,50 @@ def test_windowed_forward_matches_compact_forward():
     l_fused, _ = m.loss(params, batch, window=(off, win))
     np.testing.assert_array_equal(np.asarray(l_compact),
                                   np.asarray(l_fused))
+
+
+def test_windowed_forward_multi_axis_matches_compact():
+    """Same layer-level equivalence for a per-axis window mapping covering
+    d_ff + GQA-coupled heads/kv_heads, passed as a plain dict."""
+    from repro.core import extract as ex
+    from repro.core.masking import collect_axis_dims, make_scheme
+    cfg, m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5,
+                          axes=("d_ff", "heads", "kv_heads"))
+    scheme = make_scheme(scfg, collect_axis_dims(m.abstract_params(),
+                                                 m.axes()))
+    offsets = {k: int(v[1]) for k, v in scheme.grids.items()}
+    for k, (src, group) in scheme.derived.items():
+        offsets[k] = offsets[src] * group
+    batch = {k: v[0, 0] for k, v in _batch(cfg).items()}
+    sub = ex.extract(params, m.axes(), offsets, scheme.sizes)
+    l_compact, _ = m.loss(sub, batch)
+    window = {k: (offsets[k], scheme.sizes[k]) for k in scheme.sizes}
+    l_fused, _ = m.loss(params, batch, window=window)
+    np.testing.assert_array_equal(np.asarray(l_compact),
+                                  np.asarray(l_fused))
+
+
+def test_window_map_validation():
+    """WindowMap refuses axes without a fused forward; the model refuses
+    head windows on MLA attention."""
+    with pytest.raises(ValueError, match="no window-aware forward"):
+        WindowMap({("d_model", 64): (0, 32)})
+    # spec normalization: bare tuples become AxisWindow with mult=1
+    wm = WindowMap({("d_ff", 128): (0, 64)})
+    spec = wm.get("d_ff", 128)
+    assert isinstance(spec, AxisWindow) and spec.mult == 1
+    assert wm.get("d_ff", 256) is None
+    # alignment certificate: mult scales with the flattened layout
+    assert AxisWindow(0, 4, 2).aligned(64, scale=32)
+    assert not AxisWindow(0, 4, 1).aligned(64, scale=32)
+    assert AxisWindow(0, 4, 0).aligned(64)   # offsets always 0
+    # MLA + head windows must refuse (no GQA grouping to couple to)
+    cfg = get_reduced_config("deepseek_v3_671b")
+    m = build_model(cfg, remat=False)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {k: v[0, 0] for k, v in _batch(cfg).items()}
+    with pytest.raises(ValueError, match="MLA"):
+        m.loss(params, batch,
+               window={("heads", cfg.n_heads): (0, cfg.n_heads // 2)})

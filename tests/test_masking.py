@@ -94,3 +94,35 @@ def test_sub_abstract_shapes():
     assert sub["blk"]["w1"].shape == (32, 48)
     assert sub["blk"]["wq"].shape == (32, 4, 4)
     assert sub["embed"].shape == (64, 32)  # untouched
+
+
+def test_grid_multiple_alignment_certificate():
+    """grid_multiple is the static alignment certificate the fused arm
+    threads into AxisWindow.mult: every producible offset is a multiple of
+    it, derived axes scale by the GQA group, static schemes certify 0."""
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5,
+                          axes=("d_ff", "heads", "kv_heads"))
+    sch = make_scheme(scfg, collect_axis_dims(AB, AXES))
+    for key, grid in sch.grids.items():
+        m = sch.grid_multiple(key)
+        assert m >= 0
+        offs = np.asarray(grid)
+        if m == 0:
+            assert (offs == 0).all()
+        else:
+            assert (offs % m == 0).all()
+    # derived heads certificate = kv certificate x group
+    hkey, kvkey = ("heads", 8), ("kv_heads", 4)
+    assert hkey in sch.derived
+    _, group = sch.derived[hkey]
+    assert sch.grid_multiple(hkey) == sch.grid_multiple(kvkey) * group
+    # static scheme: offsets are always 0
+    st = make_scheme(SubmodelConfig(scheme="static", capacity=0.5,
+                                    axes=("d_ff",)),
+                     collect_axis_dims(AB, AXES))
+    assert st.grid_multiple(("d_ff", 96)) == 0
+    # unaligned exact-tail entry poisons the certificate (gcd drops)
+    tail = make_scheme(SubmodelConfig(scheme="rolling", capacity=0.5,
+                                      axes=("d_ff",), align=8),
+                       {("d_ff", 100): None})
+    assert tail.grid_multiple(("d_ff", 100)) % 8 != 0
