@@ -373,7 +373,9 @@ def fed_round_fused(rounds):
     one transformer (full default SubmodelConfig.axes: d_ff + GQA-coupled
     heads/kv_heads here): the two must be bitwise-equal on f32, the fused
     arm must not be slower, and the fused client phase must materialize no
-    stacked per-client W_sub copy (checked in the compiled HLO)."""
+    stacked per-client W_sub copy (checked in the compiled HLO).  A second
+    STAGGERED arm pins the same bitwise contract for per-client windows
+    (each client on its own rolling window, the batched-offset kernels)."""
     import jax
     import jax.numpy as jnp
     from dataclasses import replace
@@ -446,6 +448,35 @@ def fed_round_fused(rounds):
     emit("fed_round_fused", "extract_client_wsub_stacks", n_extract)
     emit("fed_round_fused", "fused_client_wsub_stacks", n_fused)
     emit("fed_round_fused", "fused_no_wsub_alloc", int(n_fused == 0))
+
+    # -- staggered arm: per-client windows through the batched-offset
+    # kernels; clients vmap over their own WindowMaps.  Same bitwise
+    # contract as the shared-window arm (the CI gate checks both).
+    sscfg = replace(scfg, stagger=True)
+    sfeds = {"staggered_fused": api.fed_round(m, sscfg, fused_forward="on"),
+             "staggered_extract": api.fed_round(m, sscfg,
+                                                fused_forward="off")}
+    assert not sfeds["staggered_fused"].shared_window
+    souts = {}
+    for name, fed in sfeds.items():
+        step = jax.jit(fed.round)
+        new, _ = step(params, batch, 0, jax.random.PRNGKey(1))  # compile
+        jax.block_until_ready(jax.tree_util.tree_leaves(new)[0])
+        t0 = time.time()
+        n = 3
+        for r in range(n):
+            new, _ = step(params, batch, 0, jax.random.PRNGKey(1))
+        jax.block_until_ready(jax.tree_util.tree_leaves(new)[0])
+        souts[name] = new
+        emit("fed_round_fused", f"{name}_round_ms",
+             round((time.time() - t0) / n * 1e3, 1))
+
+    smax = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(souts["staggered_fused"]),
+        jax.tree_util.tree_leaves(souts["staggered_extract"])))
+    emit("fed_round_fused", "staggered_round_maxdelta", f"{smax:.2e}")
+    emit("fed_round_fused", "staggered_round_bitwise_equal",
+         int(smax == 0.0))
 
 
 def roofline(rounds):

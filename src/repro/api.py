@@ -1,26 +1,51 @@
 """repro.api — the library's single public entry surface.
 
 One facade constructs a federated sub-model round in either executable
-form, with pluggable client/server optimizers::
+form, with pluggable client/server optimizers; one :class:`Trainer` owns
+the loop.  ``model`` is anything exposing the model-zoo protocol
+(``.loss``, ``.abstract_params()``, ``.axes()``) or a raw ``(loss_fn,
+abstract, axes_tree)`` triple — the theory/benchmark problems use the
+latter.  End to end on a tiny least-squares triple:
 
-    from repro import api
-
-    fed = api.fed_round(model, scfg)                 # mode from the scheme
-    trainer = api.Trainer(fed, params, rng=0)
-    params, history = trainer.run(batches, n_rounds)
-
-``model`` is anything exposing the model-zoo protocol (``.loss``,
-``.abstract_params()``, ``.axes()``) or a raw ``(loss_fn, abstract,
-axes_tree)`` triple — the theory/benchmark problems use the latter.
+>>> import jax, jax.numpy as jnp
+>>> from repro import api
+>>> from repro.configs.base import SubmodelConfig
+>>> def loss(w, batch):
+...     # window mode hands each client a COMPACT sub-model (here: a
+...     # contiguous half of w), so the objective must be shape-agnostic
+...     r = w["w"] - batch["target"].mean()
+...     return 0.5 * jnp.mean(r * r), {}
+>>> abstract = {"w": jax.ShapeDtypeStruct((8,), jnp.float32)}
+>>> scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+...                       clients_per_round=4, client_lr=0.3)
+>>> fed = api.fed_round((loss, abstract, {"w": ("d_ff",)}), scfg)
+>>> type(fed).__name__                    # rolling -> compact window mode
+'WindowFedAvg'
+>>> def batches():                        # leaves [K, C, ...]
+...     while True:
+...         yield {"target": jnp.ones((2, 4, 1))}
+>>> trainer = api.Trainer(fed, {"w": jnp.zeros(8)}, rng=1)
+>>> params, history = trainer.run(batches(), 8)
+>>> params["w"].shape, len(history)
+((8,), 8)
+>>> trainer.losses[-1] < trainer.losses[0]    # rolling windows cover w
+True
 
 Mode selection (``mode="auto"``): ``bernoulli`` → dense-mask mode (the
 only form that can express unstructured Algorithm-1 masks); every other
 scheme → compact window mode (the production TPU path).  ``mode="mask"``
 forces the paper-faithful dense path (per-client heterogeneous
-``capacities`` supported); ``mode="window"`` forces the compact path.
+``capacities`` supported); ``mode="window"`` forces the compact path:
+
+>>> bern = SubmodelConfig(scheme="bernoulli", capacity=0.5,
+...                       clients_per_round=4)
+>>> api.resolve_mode("auto", bern.scheme)
+'mask'
 
 Deprecated constructors (kept as shims): ``make_window_fed_round`` /
-``make_mask_fed_round`` in ``repro.core.fedavg``.
+``make_mask_fed_round`` in ``repro.core.fedavg``.  The paper → code
+mapping lives in ``docs/paper_map.md``; the module layering in
+``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -133,21 +158,47 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
         client phase through the fused multi-axis window forward (no
         extract/scatter, no W_sub copy; the model reads only the active
         windows from HBM) whenever the model exposes a window-aware
-        ``loss(params, batch, window=...)``, the scheme shares one window
-        across clients, and every properly-windowed axis has a fused
-        forward: ``d_ff`` (MLP/MTP), GQA-coupled ``heads``/``kv_heads``
-        (windowed q/k/v/o projections), ``experts`` and ``moe_d_ff`` (MoE
-        routing + per-expert/shared MLPs) — the full default
-        ``SubmodelConfig.axes`` tuple on GQA/MoE transformer families.
-        ``ssm_heads`` (SSM/hybrid models) and MLA's uncoupled ``heads``
-        have no fused arm yet: ``"auto"`` falls back to extract there.
+        ``loss(params, batch, window=...)`` and every properly-windowed
+        axis has a fused forward: ``d_ff`` (MLP/MTP), GQA-coupled
+        ``heads``/``kv_heads`` (windowed q/k/v/o projections), MLA's
+        standalone ``heads`` (windowed per-head up-projections),
+        ``experts`` and ``moe_d_ff`` (MoE routing + per-expert/shared
+        MLPs), and ``ssm_heads`` (windowed SSD projections) — the full
+        default ``SubmodelConfig.axes`` tuple across the model zoo.
+        Shared-window schemes (rolling/static/importance without stagger)
+        fuse through the scalar-offset kernels; per-client schemes
+        (staggered rolling, random, staggered importance) fuse through
+        the batched-offset kernels (one prefetched offset per client).
         ``"on"``/True forces fusion (error when unavailable),
         ``"off"``/False keeps the extract-based client phase.  Fused and
-        extract rounds are bitwise-equal on f32 (property-tested).
+        extract rounds are bitwise-equal on f32 (property-tested; see the
+        README fused-coverage matrix, pinned by ``tests/test_docs.py``).
 
     Returns a :class:`WindowFedAvg` or :class:`MaskFedAvg` whose ``round``
     signature is identical across modes (mask mode additionally accepts
     per-round ``capacities``).
+
+    A per-client-capacity mask round (the paper's heterogeneous-device
+    setting), stepped directly:
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from repro import api
+    >>> from repro.configs.base import SubmodelConfig
+    >>> def loss(w, batch):
+    ...     r = batch["x"] @ w["w"] - batch["y"]
+    ...     return 0.5 * jnp.mean(r * r), {}
+    >>> abstract = {"w": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    >>> scfg = SubmodelConfig(scheme="bernoulli", capacity=0.5,
+    ...                       local_steps=1, clients_per_round=2)
+    >>> fed = api.fed_round((loss, abstract, {"w": ("d_ff",)}), scfg,
+    ...                     capacities=np.array([0.25, 1.0], np.float32))
+    >>> type(fed).__name__
+    'MaskFedAvg'
+    >>> batch = {"x": jnp.ones((1, 2, 4, 8)), "y": jnp.ones((1, 2, 4))}
+    >>> params, metrics = fed.round({"w": jnp.zeros(8)}, batch, 0,
+    ...                             jax.random.PRNGKey(0))
+    >>> params["w"].shape, metrics["client_loss"].shape
+    ((8,), (1, 2))
     """
     loss_fn, abstract, axes_tree = _model_parts(model)
     resolved = resolve_mode(mode, scfg.scheme)

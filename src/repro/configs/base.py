@@ -163,7 +163,27 @@ INPUT_SHAPES = {
 
 @dataclass(frozen=True)
 class SubmodelConfig:
-    """Configuration of distributed sub-model training (Alg. 1 / Alg. 2)."""
+    """Configuration of distributed sub-model training (Alg. 1 / Alg. 2).
+
+    The one object that fixes a round's sub-model plan: which semantic
+    ``axes`` are windowed, the per-axis ``capacity`` fraction, the
+    selection ``scheme`` (``rolling`` is the paper's shuffled Algorithm 2;
+    ``bernoulli`` the unstructured Algorithm 1), K ``local_steps``, C
+    ``clients_per_round``, and the client/server learning rates.  Consumed
+    by :func:`repro.api.fed_round`::
+
+        scfg = SubmodelConfig(scheme="rolling", capacity=0.5,
+                              local_steps=2, clients_per_round=16,
+                              stagger=True)       # per-client windows
+        fed = api.fed_round(model, scfg)
+
+    ``stagger=True`` rotates the rolling window per client (full axis
+    coverage every round — beyond-paper); ``align`` rounds window sizes
+    and offsets to hardware-friendly multiples (128 on TPU keeps every
+    fused-kernel block dense MXU work); ``wrap`` enables FedRolex
+    wraparound windows (dense-mask mode).  See ``docs/paper_map.md`` for
+    the paper symbol ↔ field mapping.
+    """
 
     scheme: str = "rolling"        # rolling | random | static | full
     capacity: float = 0.5          # beta: fraction of each maskable axis

@@ -88,9 +88,13 @@ class WindowFedAvg:
     # Fused multi-axis window forward: clients skip extract/scatter
     # entirely and run K steps on the FULL tree through a window-aware
     # model forward (loss_fn(params, batch, window={axis: (offset, win)})).
-    # "auto" takes the fused arm whenever a windowed loss is attached, the
-    # scheme shares a window, and every properly-windowed axis has a fused
-    # forward (d_ff, GQA-coupled heads/kv_heads, experts, moe_d_ff).
+    # "auto" takes the fused arm whenever a windowed loss is attached and
+    # every properly-windowed axis has a fused forward (d_ff, GQA-coupled
+    # heads/kv_heads, MLA standalone heads, experts, moe_d_ff, ssm_heads).
+    # Shared-window schemes close one WindowMap over the client vmap;
+    # per-client schemes (staggered rolling / random / staggered
+    # importance) vmap clients over their own WindowMaps — the batched-
+    # offset rolling-matmul arm (kernels.rolling_matmul_batched).
     windowed_loss_fn: Optional[Callable] = None
     fused_forward: Any = "auto"         # "auto" | True/"on" | False/"off"
 
@@ -119,9 +123,6 @@ class WindowFedAvg:
         if self.windowed_loss_fn is None:
             reasons.append("the model exposes no windowed forward "
                            "(loss(params, batch, window=...))")
-        if not self.shared_window:
-            reasons.append("the scheme does not share one window across "
-                           "clients")
         if not proper:
             reasons.append("no axis is actually windowed (nothing to fuse)")
         unsupported = [k for k in proper if k[0] not in supported]
@@ -129,11 +130,17 @@ class WindowFedAvg:
             reasons.append(f"axes {sorted(unsupported)} have no fused "
                            f"window-aware forward (supported: "
                            f"{supported})")
-        # GQA coupling: a heads window must be derived from kv_heads so the
-        # windowed q heads keep grouping onto the windowed kv heads.
+        # GQA coupling: on models with a kv_heads axis (GQA attention), a
+        # heads window must be derived from kv_heads so the windowed q
+        # heads keep grouping onto the windowed kv heads.  Models without
+        # kv_heads dims (MLA: per-head up-projections from a shared
+        # compressed kv) window heads standalone.
         uncoupled = [k for k in proper
                      if k[0] == "heads" and k not in self.scheme.derived]
-        if uncoupled:
+        if uncoupled and any(
+                name == "kv_heads"
+                for (name, _) in collect_axis_dims(self.abstract,
+                                                   self.axes_tree)):
             reasons.append(f"heads windows {sorted(uncoupled)} are not "
                            "GQA-derived from a kv_heads window")
         if reasons:
@@ -151,11 +158,11 @@ class WindowFedAvg:
         self._fused_mults = {k: self.scheme.grid_multiple(k) for k in proper}
         return True
 
-    def _fused_window(self, offsets):
-        """The per-axis WindowMap for one round's shared offsets."""
+    def _fused_window(self, off_scalars):
+        """The per-axis WindowMap for one client's scalar offsets."""
         from repro.models.layers import AxisWindow, WindowMap
         return WindowMap(
-            {k: AxisWindow(offsets[k][0], w, self._fused_mults[k])
+            {k: AxisWindow(off_scalars[k], w, self._fused_mults[k])
              for k, w in self._fused_keys.items()},
             backend=self.kernel_backend)
 
@@ -214,28 +221,53 @@ class WindowFedAvg:
 
         No ``extract``/``scatter_delta`` and no compact W_sub copy: the
         model's window-aware forward (``mlp_apply_rolling`` /
-        ``_head_proj`` through the ``dispatch.rolling_matmul`` custom VJP,
+        ``head_proj`` through the ``dispatch.rolling_matmul`` custom VJP,
         windowed expert slices in the MoE block) reads only the active
         windows from HBM, and out-of-window coordinates of every windowed
         axis see an exactly-zero gradient, so their K-step delta is
         exactly 0.  Returns the FULL-shaped f32 delta (consumed by the
         ``*_fused`` aggregations, which slice/scatter the multi-axis
         window like the extract path does).
+
+        Shared-window schemes close ONE WindowMap over the client vmap;
+        per-client schemes (staggered rolling / random / staggered
+        importance) additionally vmap the per-client offset scalars, so
+        each client trains its own window — the windowed matmuls then
+        lower to the batched-offset Pallas arm
+        (``kernels.rolling_matmul_batched``: one grid row per client, each
+        prefetching its own offset).
         """
         c = self.scfg
         C = c.clients_per_round
-        window = self._fused_window(offsets)
         full0 = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
         full0 = constrain_tree(full0, self.axes_tree)
         wloss = self.windowed_loss_fn
-        grad_fn = jax.value_and_grad(
-            lambda p, mb: wloss(p, mb, window=window), has_aux=True)
         opt = self.client_opt
+
+        if self.shared_window:
+            window = self._fused_window(
+                {k: offsets[k][0] for k in self._fused_keys})
+            grad_fn = jax.value_and_grad(
+                lambda p, mb: wloss(p, mb, window=window), has_aux=True)
+
+            def vgrad(p, mb):
+                return self._vmap(grad_fn)(p, mb)
+        else:
+            per_client = {k: offsets[k] for k in self._fused_keys}  # [C]
+
+            def grad_one(p, mb, off):
+                window = self._fused_window(off)
+                return jax.value_and_grad(
+                    lambda p, mb: wloss(p, mb, window=window),
+                    has_aux=True)(p, mb)
+
+            def vgrad(p, mb):
+                return self._vmap(grad_one)(p, mb, per_client)
 
         def kstep(carry, mb):
             p, ost = carry
-            (loss, metrics), g = self._vmap(grad_fn)(p, mb)
+            (loss, metrics), g = vgrad(p, mb)
             p, ost = opt.update(p, g, ost, c.client_lr,
                                 backend=self.kernel_backend)
             p = constrain_tree(p, self.axes_tree)
@@ -282,23 +314,62 @@ class WindowFedAvg:
     def _apply_mean_delta_fused(self, params, delta_full, offsets):
         """Aggregation for the fused client phase's FULL-shaped delta.
 
-        Out-of-window coordinates of the fused delta are exactly 0, so the
-        client mean commutes with the window slice: average first, slice the
-        shared window once, then the same single in-place scatter as the
-        extract path — bitwise the extract round's aggregation on f32."""
-        off0 = {k: v[0] for k, v in offsets.items()}
-        dbar_full = jax.tree_util.tree_map(
-            lambda d: jnp.mean(d.astype(jnp.float32), axis=0), delta_full)
-        dbar = ex.extract(dbar_full, self.axes_tree, off0, self.scheme.sizes)
-        return _scatter_update(params, dbar, self.abstract, self.axes_tree,
-                               off0, self.scheme.sizes, self.scfg.server_lr)
+        Shared window: out-of-window coordinates of the fused delta are
+        exactly 0, so the client mean commutes with the window slice —
+        average first, slice the shared window once, then the same single
+        in-place scatter as the extract path.
+
+        Per-client windows (staggered/random): each client's full-shaped
+        delta already IS its scattered form (exact zeros outside its own
+        window), so the extract path's per-client scatter-add collapses to
+        a scan of plain adds — op-for-op the same accumulation order, which
+        keeps the round bitwise-equal to extract on f32."""
+        c = self.scfg
+        C = c.clients_per_round
+        if self.shared_window:
+            off0 = {k: v[0] for k, v in offsets.items()}
+            dbar_full = jax.tree_util.tree_map(
+                lambda d: jnp.mean(d.astype(jnp.float32), axis=0),
+                delta_full)
+            dbar = ex.extract(dbar_full, self.axes_tree, off0,
+                              self.scheme.sizes)
+            return _scatter_update(params, dbar, self.abstract,
+                                   self.axes_tree, off0, self.scheme.sizes,
+                                   c.server_lr)
+
+        def acc_step(acc, d_c):
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype), acc, d_c)
+            return constrain_tree(acc, self.axes_tree, leading=()), None
+
+        acc0 = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
+        acc, _ = jax.lax.scan(acc_step, acc0, delta_full)
+        return jax.tree_util.tree_map(
+            lambda w, d: (w + c.server_lr * d.astype(jnp.float32) / C
+                          ).astype(w.dtype), params, acc)
 
     def _mean_delta_full_fused(self, delta_full):
         """Server pseudo-gradient from the fused phase: already full-shaped
-        with exact zeros outside the window — the mean IS the scattered mean
-        of the extract path."""
-        return jax.tree_util.tree_map(
-            lambda d: jnp.mean(d.astype(jnp.float32), axis=0), delta_full)
+        with exact zeros outside each client's window — the shared-window
+        mean IS the scattered mean of the extract path; per-client windows
+        mirror the extract path's scatter-average scan (same accumulation
+        order, bitwise)."""
+        if self.shared_window:
+            return jax.tree_util.tree_map(
+                lambda d: jnp.mean(d.astype(jnp.float32), axis=0),
+                delta_full)
+        C = self.scfg.clients_per_round
+
+        def acc_step(acc, d_c):
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype) / C, acc, d_c)
+            return constrain_tree(acc, self.axes_tree, leading=()), None
+
+        z = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
+        full, _ = jax.lax.scan(acc_step, z, delta_full)
+        return full
 
     def _mean_delta_full(self, params, delta, offsets):
         """Full-shaped f32 mean client delta (the server pseudo-gradient).

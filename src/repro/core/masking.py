@@ -76,7 +76,14 @@ class WindowScheme:
 
     def importance_offsets(self, params, axes_tree, n_clients):
         """Data-dependent offsets: per axis, the grid window with maximal
-        squared-weight mass (all clients share it, like rolling)."""
+        squared-weight mass (all clients share it, like rolling).
+
+        ``cfg.stagger=True`` resolves the grid *per client*: grid windows
+        are ranked by mass and client ``i`` trains the ``i``-th best (mod
+        R), so one round covers the R most important windows instead of
+        putting every client on the single best one.  The offsets stay on
+        the same grid, so the :meth:`grid_multiple` alignment certificate
+        — and with it the fused batched-offset kernel arm — still holds."""
         # accumulate per-unit importance for every windowed axis
         mass: Dict[AxisKey, jnp.ndarray] = {}
 
@@ -101,8 +108,16 @@ class WindowScheme:
             csum = jnp.concatenate([jnp.zeros(1), jnp.cumsum(m)])
             window_mass = csum[w:] - csum[:-w]          # [n-w+1]
             grid = self.grids[key]
-            best = grid[jnp.argmax(window_mass[grid])]
-            out[key] = jnp.broadcast_to(best, (n_clients,)).astype(jnp.int32)
+            if self.cfg.stagger:
+                # rank grid windows by mass, client i takes the i-th best
+                # (argsort is stable, so client 0 keeps the argmax window)
+                order = jnp.argsort(-window_mass[grid])
+                idx = order[jnp.arange(n_clients) % grid.shape[0]]
+                out[key] = grid[idx].astype(jnp.int32)
+            else:
+                best = grid[jnp.argmax(window_mass[grid])]
+                out[key] = jnp.broadcast_to(best,
+                                            (n_clients,)).astype(jnp.int32)
         for k, (src, group) in self.derived.items():
             out[k] = out[src] * group
         return out

@@ -33,9 +33,26 @@ def _record(round_idx, metrics) -> Dict[str, Any]:
 class Trainer:
     """Drives ``fed.round`` (or ``fed.round_with_server_opt``) for N rounds.
 
-    Callbacks run after each round as ``cb(round_idx, params, record)`` where
-    ``record`` is the metrics dict appended to ``history`` (eval metrics
-    merged in on eval rounds).
+    Construct with a round object from :func:`repro.api.fed_round` and the
+    initial params, then call :meth:`run` with a batch iterator (leaves
+    ``[K, C, ...]``; items may be ``(batch, round_kwargs)`` pairs)::
+
+        fed = api.fed_round(model, scfg, server_opt="adam")
+        trainer = api.Trainer(fed, params, rng=0, log_every=10)
+        params, history = trainer.run(batches, n_rounds=50)
+        trainer.run(batches, 50)          # resumes at round 50
+
+    When the round carries a server optimizer (or ``server_opt=`` is
+    passed here), the trainer steps ``round_with_server_opt`` and carries
+    ``opt_state`` across rounds.  ``history`` keeps per-round metric
+    records as device arrays (no host sync in the loop);
+    :attr:`losses` materializes the float loss curve once.
+
+    Callbacks run after each round as ``cb(round_idx, params, record)``
+    where ``record`` is the metrics dict appended to ``history`` (eval
+    metrics merged in on eval rounds — see ``eval_fn`` / ``eval_every``).
+    Checkpoint periodically via :func:`checkpoint_callback`; ``start_round``
+    resumes a restored schedule mid-way.
     """
 
     fed: Any                              # WindowFedAvg | MaskFedAvg

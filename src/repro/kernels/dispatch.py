@@ -27,6 +27,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import custom_batching
 
 from repro.core import submodel as sm
 from repro.kernels import compat, ref
@@ -34,6 +35,10 @@ from repro.kernels.masked_update import sgd_2d
 from repro.kernels.ops import (_from_2d, _to_2d, fillin_agg_tree,
                                masked_sgd_tree)
 from repro.kernels.rolling_matmul import rolling_matmul as _rolling_mm_pallas
+from repro.kernels.rolling_matmul_batched import \
+    rolling_matmul_batched as _rolling_mm_batched_pallas
+from repro.kernels.rolling_matmul_batched import \
+    rolling_matmul_batched_dx as _rolling_dx_batched_pallas
 from repro.kernels.rolling_matmul_bwd import \
     rolling_matmul_dx as _rolling_dx_pallas
 
@@ -143,14 +148,80 @@ def _rolling_tileable(M, K, win, offset, bm, bn, bk, assume_aligned):
     return _offset_aligned(offset, bn, assume_aligned)
 
 
+def _pallas_fwd(x, w, offset, win, bm, bn, bk):
+    """The Pallas forward arm, batchable: under ``jax.vmap`` (the fused
+    client phase maps the model over clients) this lowers to ONE
+    batched-offset kernel call (``kernels.rolling_matmul_batched``) instead
+    of the per-client loop the generic pallas_call batching rule would
+    synthesize — each client's grid row prefetches its own offset."""
+    interp = interpret_mode()
+
+    @custom_batching.custom_vmap
+    def fwd(x, w, offset):
+        return _rolling_mm_pallas(x, w, offset, win, bm=bm, bn=bn, bk=bk,
+                                  interpret=interp)
+
+    @fwd.def_vmap
+    def _rule(axis_size, in_batched, x, w, offset):  # noqa: ANN001
+        xb, wb, ob = in_batched
+        if not wb and not ob:
+            # shared weight AND offset: fold the batch into rows — the
+            # unbatched kernel already expresses this with zero copies.
+            # bm is clamped to the UNBATCHED row count so the folded rows
+            # (axis_size * M) still tile evenly.
+            y = _rolling_mm_pallas(x.reshape(-1, x.shape[-1]), w, offset,
+                                   win, bm=min(bm, x.shape[-2]), bn=bn,
+                                   bk=bk, interpret=interp)
+            return y.reshape(axis_size, -1, win), True
+        xx = x if xb else jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+        ww = w if wb else jnp.broadcast_to(w[None], (axis_size,) + w.shape)
+        oo = jnp.asarray(offset, jnp.int32)
+        if not ob:
+            oo = jnp.broadcast_to(oo[None], (axis_size,))
+        y = _rolling_mm_batched_pallas(xx, ww, oo, win, bm=bm, bn=bn, bk=bk,
+                                       interpret=interp)
+        return y, True
+
+    return fwd(x, w, jnp.asarray(offset, jnp.int32))
+
+
 def _rolling_fwd_arm(x, w, offset, win, backend, bm, bn, bk, assume_aligned):
     b = resolve_backend(backend)
     M, K = x.shape
     if b == "pallas" and _rolling_tileable(M, K, win, offset, bm, bn, bk,
                                            assume_aligned):
-        return _rolling_mm_pallas(x, w, offset, win, bm=bm, bn=bn, bk=bk,
-                                  interpret=interpret_mode())
+        return _pallas_fwd(x, w, offset, win, bm, bn, bk)
     return ref.rolling_matmul_ref(x, w, offset, win)
+
+
+def _pallas_dx(dy, w, offset, win, bm, bn, bk):
+    """Batchable Pallas backward arm (mirrors :func:`_pallas_fwd`)."""
+    interp = interpret_mode()
+
+    @custom_batching.custom_vmap
+    def bwd(dy, w, offset):
+        return _rolling_dx_pallas(dy, w, offset, win, bm=bm, bn=bn, bk=bk,
+                                  interpret=interp)
+
+    @bwd.def_vmap
+    def _rule(axis_size, in_batched, dy, w, offset):  # noqa: ANN001
+        dyb, wb, ob = in_batched
+        if not wb and not ob:
+            dx = _rolling_dx_pallas(dy.reshape(-1, win), w, offset, win,
+                                    bm=min(bm, dy.shape[-2]), bn=bn, bk=bk,
+                                    interpret=interp)
+            return dx.reshape(axis_size, -1, w.shape[0]), True
+        dd = dy if dyb else jnp.broadcast_to(dy[None],
+                                             (axis_size,) + dy.shape)
+        ww = w if wb else jnp.broadcast_to(w[None], (axis_size,) + w.shape)
+        oo = jnp.asarray(offset, jnp.int32)
+        if not ob:
+            oo = jnp.broadcast_to(oo[None], (axis_size,))
+        dx = _rolling_dx_batched_pallas(dd, ww, oo, win, bm=bm, bn=bn,
+                                        bk=bk, interpret=interp)
+        return dx, True
+
+    return bwd(dy, w, jnp.asarray(offset, jnp.int32))
 
 
 def _rolling_dx_arm(dy, w, offset, win, backend, bm, bn, bk, assume_aligned):
@@ -164,8 +235,7 @@ def _rolling_dx_arm(dy, w, offset, win, backend, bm, bn, bk, assume_aligned):
     tileable = (M % bm_ == 0 and K % bn_ == 0 and win % bk_ == 0
                 and _offset_aligned(offset, bk_, assume_aligned))
     if b == "pallas" and tileable:
-        return _rolling_dx_pallas(dy, w, offset, win, bm=bm, bn=bn, bk=bk,
-                                  interpret=interpret_mode())
+        return _pallas_dx(dy, w, offset, win, bm, bn, bk)
     wsub = jax.lax.dynamic_slice_in_dim(w, offset, win, axis=1)
     return jax.lax.dot_general(
         dy, wsub, (((1,), (1,)), ((), ())),
@@ -219,6 +289,118 @@ def rolling_matmul(x, w, offset, win, backend=None, bm=128, bn=128, bk=128,
     Registered with a custom VJP: ``dx = dy @ w[:, off:off+win]^T`` via the
     offset-prefetch backward kernel (``kernels.rolling_matmul_bwd``), ``dW``
     as a window scatter-add of ``x^T @ dy``; both halves dispatch per
-    backend with the jnp oracle as the autodiff fallback."""
+    backend with the jnp oracle as the autodiff fallback.
+
+    Under ``jax.vmap`` with a *batched* offset (the staggered fused client
+    phase: per-client windows), both Pallas halves lower to the
+    batched-offset kernels in ``kernels.rolling_matmul_batched`` — one grid
+    row per batch element, each prefetching its own offset — instead of a
+    synthesized per-element loop; the jnp oracle batches through the
+    ordinary gather rules.  :func:`rolling_matmul_batched` is the same arm
+    with the batch explicit in the call."""
     return _rolling_mm(x, w, offset, win, backend, bm, bn, bk,
                        assume_aligned)
+
+
+# -- explicit batched-offset form (per-client windows, staggered schemes) ----
+
+
+def _batched_offsets_aligned(offsets, block, assume_aligned):
+    """Concrete offsets: every row must land on a block boundary; traced
+    offsets fall back to the caller's alignment certificate."""
+    try:
+        return bool((np.asarray(offsets) % block == 0).all())
+    except (TypeError, jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return assume_aligned
+
+
+def _rolling_b_fwd_arm(x, w, offsets, win, backend, bm, bn, bk,
+                       assume_aligned):
+    b = resolve_backend(backend)
+    _, M, K = x.shape
+    bm_, bn_, bk_ = min(bm, M), min(bn, win), min(bk, K)
+    tileable = (M % bm_ == 0 and win % bn_ == 0 and K % bk_ == 0
+                and _batched_offsets_aligned(offsets, bn_, assume_aligned))
+    if b == "pallas" and tileable:
+        return _rolling_mm_batched_pallas(x, w, offsets, win, bm=bm, bn=bn,
+                                          bk=bk,
+                                          interpret=interpret_mode())
+    return jax.vmap(ref.rolling_matmul_ref,
+                    in_axes=(0, 0, 0, None))(x, w, offsets, win)
+
+
+def _rolling_b_dx_arm(dy, w, offsets, win, backend, bm, bn, bk,
+                      assume_aligned):
+    b = resolve_backend(backend)
+    _, M, _ = dy.shape
+    K = w.shape[1]
+    bm_, bn_, bk_ = min(bm, M), min(bn, K), min(bk, win)
+    tileable = (M % bm_ == 0 and K % bn_ == 0 and win % bk_ == 0
+                and _batched_offsets_aligned(offsets, bk_, assume_aligned))
+    if b == "pallas" and tileable:
+        return _rolling_dx_batched_pallas(dy, w, offsets, win, bm=bm, bn=bn,
+                                          bk=bk,
+                                          interpret=interpret_mode())
+
+    def one(dy_b, w_b, off_b):
+        wsub = jax.lax.dynamic_slice_in_dim(w_b, off_b, win, axis=1)
+        return jax.lax.dot_general(
+            dy_b, wsub, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dy_b.dtype)
+
+    return jax.vmap(one)(dy, w, offsets)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _rolling_mm_b(x, w, offsets, win, backend, bm, bn, bk, assume_aligned):
+    return _rolling_b_fwd_arm(x, w, offsets, win, backend, bm, bn, bk,
+                              assume_aligned)
+
+
+def _rolling_mm_b_fwd(x, w, offsets, win, backend, bm, bn, bk,
+                      assume_aligned):
+    y = _rolling_b_fwd_arm(x, w, offsets, win, backend, bm, bn, bk,
+                           assume_aligned)
+    return y, (x, w, offsets)
+
+
+def _rolling_mm_b_bwd(win, backend, bm, bn, bk, assume_aligned, res, dy):
+    """Mirror of the shared-offset VJP, per batch row: dx through the
+    batched offset-prefetch backward kernel (vmapped oracle fallback), dW
+    as a per-row window scatter-add of ``x[b]^T @ dy[b]``."""
+    x, w, offsets = res
+    dx = _rolling_b_dx_arm(dy, w, offsets, win, backend, bm, bn, bk,
+                           assume_aligned)
+
+    def dw_one(x_b, dy_b, off_b, w_b):
+        dw_win = jax.lax.dot_general(
+            x_b, dy_b, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(w_b.dtype)
+        return jax.lax.dynamic_update_slice(
+            jnp.zeros(w_b.shape, dw_win.dtype), dw_win, (0, off_b))
+
+    dw = jax.vmap(dw_one)(x, dy, offsets, w)
+    d_off = np.zeros(np.shape(offsets), jax.dtypes.float0)
+    return dx, dw, d_off
+
+
+_rolling_mm_b.defvjp(_rolling_mm_b_fwd, _rolling_mm_b_bwd)
+
+
+def rolling_matmul_batched(x, w, offsets, win, backend=None, bm=128, bn=128,
+                           bk=128, assume_aligned=False):
+    """y[B, M, win] = x[B, M, K] @ w[B, K, offsets[B] : offsets[B]+win],
+    differentiable — the batched-offset arm of :func:`rolling_matmul`.
+
+    One window offset per batch row (per-client windows: the staggered
+    rolling and random structured schemes).  The Pallas arm prefetches the
+    whole offset vector and indexes it with the leading grid coordinate
+    (``kernels.rolling_matmul_batched``), so each row reads only its own
+    active window of ``w`` from HBM; the jnp arm is the vmapped
+    dynamic-slice oracle.  Falls back to the oracle for untileable shapes,
+    for concrete offsets off the block grid, and for *traced* offsets
+    unless ``assume_aligned=True`` (the scheme's ``grid_multiple``
+    certificate).  Custom VJP mirrors :func:`rolling_matmul` per row."""
+    return _rolling_mm_b(x, w, offsets, win, backend, bm, bn, bk,
+                         assume_aligned)

@@ -74,10 +74,15 @@ def fillin_agg_tree(server, client_params, client_masks, server_lr=1.0,
     return jax.tree_util.tree_map(leaf, server, client_params, client_masks)
 
 
-def ssd_chunk_scan(xr, dt, A, Br, Cr, chunk, nh_block=0, interpret=True):
+def ssd_chunk_scan(xr, dt, A, Br, Cr, chunk, nh_block=0, interpret=True,
+                   head_offset=None, head_win=0):
     """Pallas-backed SSD: intra-chunk kernel + jnp inter-chunk recurrence.
 
-    Same contract as repro.models.ssm.ssd_chunked.
+    Same contract as repro.models.ssm.ssd_chunked.  ``head_offset`` /
+    ``head_win`` window the mixer over a contiguous ``ssm_heads`` range of
+    FULL-width inputs (the sub-model training window): the intra-chunk
+    kernel shifts its head-block grid by the prefetched offset so inactive
+    heads never leave HBM, and the outputs are compact ``head_win`` heads.
     """
     B, S, nh, hd = xr.shape
     N = Br.shape[-1]
@@ -89,7 +94,14 @@ def ssd_chunk_scan(xr, dt, A, Br, Cr, chunk, nh_block=0, interpret=True):
     Cs = Cr.reshape(B, nc, Q, N)
 
     y_intra, states = ssd_chunk_intra(xs, dts, A, Bs, Cs,
-                                      nh_block=nh_block, interpret=interpret)
+                                      nh_block=nh_block, interpret=interpret,
+                                      head_offset=head_offset,
+                                      head_win=head_win)
+    if head_offset is not None:
+        # the jnp inter-chunk recurrence sees the same compact head range
+        dts = jax.lax.dynamic_slice_in_dim(dts, head_offset, head_win, 3)
+        A = jax.lax.dynamic_slice_in_dim(A, head_offset, head_win, 0)
+        nh = head_win
 
     dA = dts * A
     L = jnp.cumsum(dA, axis=2)

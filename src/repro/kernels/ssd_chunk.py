@@ -20,7 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.compat import pl
+from repro.kernels.compat import pl, prefetch_scalar_grid_spec
 
 
 def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref):
@@ -48,34 +48,83 @@ def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref):
     s_ref[0, 0] = state
 
 
-def ssd_chunk_intra(x, dt, A, B, C, *, nh_block=0, interpret=True):
+def _ssd_chunk_kernel_offset(off_ref, *refs):
+    # head-window variant: the prefetched offset is consumed by the
+    # BlockSpec index maps only — the kernel body is unchanged.
+    del off_ref
+    _ssd_chunk_kernel(*refs)
+
+
+def ssd_chunk_intra(x, dt, A, B, C, *, nh_block=0, interpret=True,
+                    head_offset=None, head_win=0):
     """x [Bt,nc,Q,nh,hd]; dt [Bt,nc,Q,nh]; A [nh]; B,C [Bt,nc,Q,N].
 
     Returns (y_intra [Bt,nc,Q,nh,hd], states [Bt,nc,nh,hd,N] f32).
+
+    ``head_offset``/``head_win`` window the SSD over a contiguous
+    ``ssm_heads`` range of FULL-width inputs (the sub-model training
+    window): the offset arrives via scalar prefetch and shifts the
+    head-block grid index of x/dt/A, so inactive heads are never read from
+    HBM and the outputs are compact ``[..., head_win, ...]`` — the
+    kernel-level form of the windowed SSD projection in
+    ``repro.models.ssm``.  ``head_offset`` must be a multiple of the head
+    block; ``head_win`` a multiple too.
     """
     Bt, nc, Q, nh, hd = x.shape
     N = B.shape[-1]
-    nhb = nh_block or nh
-    assert nh % nhb == 0
-    grid = (Bt, nc, nh // nhb)
+    win = head_win or nh
+    nhb = nh_block or win
+    assert win % nhb == 0
     out_shapes = (
-        jax.ShapeDtypeStruct((Bt, nc, Q, nh, hd), x.dtype),
-        jax.ShapeDtypeStruct((Bt, nc, nh, hd, N), jnp.float32),
+        jax.ShapeDtypeStruct((Bt, nc, Q, win, hd), x.dtype),
+        jax.ShapeDtypeStruct((Bt, nc, win, hd, N), jnp.float32),
     )
-    return pl.pallas_call(
-        _ssd_chunk_kernel,
-        grid=grid,
+    if head_offset is None:
+        assert nh % nhb == 0
+        return pl.pallas_call(
+            _ssd_chunk_kernel,
+            grid=(Bt, nc, nh // nhb),
+            in_specs=[
+                pl.BlockSpec((1, 1, Q, nhb, hd),
+                             lambda b, c, h: (b, c, 0, h, 0)),
+                pl.BlockSpec((1, 1, Q, nhb), lambda b, c, h: (b, c, 0, h)),
+                pl.BlockSpec((nhb,), lambda b, c, h: (h,)),
+                pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+                pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            ],
+            out_specs=(
+                pl.BlockSpec((1, 1, Q, nhb, hd),
+                             lambda b, c, h: (b, c, 0, h, 0)),
+                pl.BlockSpec((1, 1, nhb, hd, N),
+                             lambda b, c, h: (b, c, h, 0, 0)),
+            ),
+            out_shape=out_shapes,
+            interpret=interpret,
+        )(x, dt, A, B, C)
+
+    off_blocks = jnp.asarray(head_offset, jnp.int32)[None] // nhb
+    grid_spec = prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(Bt, nc, win // nhb),
         in_specs=[
-            pl.BlockSpec((1, 1, Q, nhb, hd), lambda b, c, h: (b, c, 0, h, 0)),
-            pl.BlockSpec((1, 1, Q, nhb), lambda b, c, h: (b, c, 0, h)),
-            pl.BlockSpec((nhb,), lambda b, c, h: (h,)),
-            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
-            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, nhb, hd),
+                         lambda b, c, h, off: (b, c, 0, off[0] + h, 0)),
+            pl.BlockSpec((1, 1, Q, nhb),
+                         lambda b, c, h, off: (b, c, 0, off[0] + h)),
+            pl.BlockSpec((nhb,), lambda b, c, h, off: (off[0] + h,)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h, off: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h, off: (b, c, 0, 0)),
         ],
         out_specs=(
-            pl.BlockSpec((1, 1, Q, nhb, hd), lambda b, c, h: (b, c, 0, h, 0)),
-            pl.BlockSpec((1, 1, nhb, hd, N), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, nhb, hd),
+                         lambda b, c, h, off: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, nhb, hd, N),
+                         lambda b, c, h, off: (b, c, h, 0, 0)),
         ),
+    )
+    return pl.pallas_call(
+        _ssd_chunk_kernel_offset,
+        grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
-    )(x, dt, A, B, C)
+    )(off_blocks, x, dt, A, B, C)

@@ -45,12 +45,14 @@ def main():
                     choices=["auto", "on", "off"],
                     help="window mode: run the client phase through the "
                          "fused multi-axis window forward (no extract/"
-                         "scatter, no W_sub copy) when the scheme shares a "
-                         "window and every windowed axis has a fused arm "
-                         "(d_ff, GQA-coupled heads/kv_heads, experts, "
-                         "moe_d_ff; ssm_heads and MLA heads fall back to "
-                         "extract under 'auto'); 'on' forces it, 'off' "
-                         "keeps the extract-based client phase")
+                         "scatter, no W_sub copy) when every windowed axis "
+                         "has a fused arm (d_ff, GQA-coupled heads/"
+                         "kv_heads, MLA standalone heads, experts, "
+                         "moe_d_ff, ssm_heads); per-client schemes "
+                         "(--stagger, random) fuse through the batched-"
+                         "offset kernels; 'on' forces it, 'off' keeps the "
+                         "extract-based client phase (see the README "
+                         "fused-coverage matrix)")
     ap.add_argument("--client-opt", default="sgd",
                     choices=sorted(api.CLIENT_OPTS),
                     help="local-step optimizer (paper: sgd)")
@@ -67,9 +69,13 @@ def main():
                          "(default: the REPRO_NO_SHARED_WINDOW env var)")
     ap.add_argument("--axes", nargs="+", default=None,
                     help="semantic axes to window (default: the "
-                         "SubmodelConfig default tuple — fully fused on "
-                         "GQA/MoE transformer families; ssm/MLA-head axes "
-                         "use the extract path)")
+                         "SubmodelConfig default tuple — fully fused "
+                         "across the model zoo, incl. ssm_heads and MLA "
+                         "standalone heads)")
+    ap.add_argument("--stagger", action="store_true",
+                    help="rotate the rolling/importance window per client "
+                         "(full axis coverage every round; fused via the "
+                         "batched-offset rolling matmul)")
     ap.add_argument("--capacity", type=float, default=0.5)
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=4)
@@ -92,6 +98,7 @@ def main():
                           local_steps=args.local_steps,
                           clients_per_round=args.clients,
                           client_lr=args.lr, seed=args.seed,
+                          stagger=args.stagger,
                           shared_window=False if args.no_shared_window
                           else None, **axes_kw)
     fed = api.fed_round(model, scfg, mode=args.mode,

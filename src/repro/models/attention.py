@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.layers import ParamBuilder, apply_rope, rms_norm
+from repro.models.layers import ParamBuilder, apply_rope, head_proj, rms_norm
 
 try:  # jax>=0.6
     from jax import shard_map as _shard_map
@@ -233,22 +233,9 @@ def cp_decode_attention(mesh, q, k, v, valid, axis="data", softmax_scale=None):
 # ---------------------------------------------------------------------------
 
 
-def _head_proj(x, w, spec, backend=None):
-    """``x [B,S,D] @ w [D,H,hd]`` restricted to the contiguous head window
-    ``spec`` (an ``AxisWindow`` in head units) — ``dispatch.rolling_matmul``
-    on the head-flattened ``[D, H*hd]`` layout, so the inactive heads'
-    columns are never read from HBM and the custom VJP scatter-adds ``dW``
-    back into the full layout (exact zeros outside the window)."""
-    if spec is None:
-        return jnp.einsum("bsd,dhe->bshe", x, w)
-    from repro.kernels.dispatch import rolling_matmul  # lazy: no import cycle
-    D, H, hd = w.shape
-    lead = x.shape[:-1]
-    win = spec.win * hd
-    y = rolling_matmul(x.reshape(-1, D), w.reshape(D, H * hd),
-                       spec.offset * hd, win, backend=backend,
-                       assume_aligned=spec.aligned(min(128, win), hd))
-    return y.reshape(*lead, spec.win, hd)
+# the windowed head projection now lives in models.layers (shared with the
+# MLA and SSM head windows); keep the old name for callers and tests.
+_head_proj = head_proj
 
 
 def _qkv(p, x, cfg, positions, window=None):
@@ -346,10 +333,10 @@ def gqa_decode(p, x, cfg, cache, pos, mesh=None, cp=False,
 # ---------------------------------------------------------------------------
 
 
-def _mla_q(p, x, cfg, positions):
+def _mla_q(p, x, cfg, positions, hspec=None, backend=None):
     m = cfg.mla
     cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
-    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])
+    q = head_proj(cq, p["w_uq"], hspec, backend)
     q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     return q_nope, q_rope
@@ -362,14 +349,23 @@ def _mla_ckv(p, x, cfg, positions):
     return c, kr
 
 
-def mla_train(p, x, cfg, positions, q_chunk=0, kv_chunk=0):
-    """Decompressed path: materialize per-head k,v; blockwise attention."""
+def mla_train(p, x, cfg, positions, q_chunk=0, kv_chunk=0, window=None):
+    """Decompressed path: materialize per-head k,v; blockwise attention.
+
+    ``window`` (a ``WindowMap`` or None) applies a *standalone* ``heads``
+    window: unlike GQA there is no kv grouping to couple to — every head
+    draws its k/v from the shared compressed ``c`` — so the per-head
+    up-projections (``w_uq``/``w_uk``/``w_uv``) window independently via
+    :func:`repro.models.layers.head_proj` and ``wo`` contracts over the
+    active heads only.  The shared low-rank down-projections and the
+    decoupled rope key stay full (they carry no ``heads`` axis)."""
     m = cfg.mla
-    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    hspec = window.get("heads", p["wo"].shape[0]) if window else None
+    bk = window.backend if window else None
+    q_nope, q_rope = _mla_q(p, x, cfg, positions, hspec, bk)
     c, kr = _mla_ckv(p, x, cfg, positions)
-    k_nope = jnp.einsum("bsr,rhe->bshe", c, p["w_uk"])
-    v = jnp.einsum("bsr,rhe->bshe", c, p["w_uv"])
-    H = q_nope.shape[2]
+    k_nope = head_proj(c, p["w_uk"], hspec, bk)
+    v = head_proj(c, p["w_uv"], hspec, bk)
     k_rope = jnp.broadcast_to(kr[:, :, None, :], k_nope.shape[:3]
                               + (m.rope_head_dim,))
     q = jnp.concatenate([q_nope, q_rope], -1)
@@ -381,7 +377,12 @@ def mla_train(p, x, cfg, positions, q_chunk=0, kv_chunk=0):
     out = blockwise_attention(q, k, vp, causal=True, q_chunk=q_chunk,
                               kv_chunk=kv_chunk, softmax_scale=scale)
     out = out[..., :m.v_head_dim]
-    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    wo = p["wo"]
+    if hspec is not None:
+        # contraction over the active heads only; grads scatter back as
+        # exact zeros outside (the dynamic_slice transpose)
+        wo = jax.lax.dynamic_slice_in_dim(wo, hspec.offset, hspec.win, 0)
+    return jnp.einsum("bshe,hed->bsd", out, wo)
 
 
 def mla_prefill(p, x, cfg, positions):

@@ -59,7 +59,8 @@ class WindowMap:
     weight shapes (``window.get(name, w.shape[d])``), mirroring how
     ``core.extract`` matches windowed dims."""
 
-    SUPPORTED = ("d_ff", "heads", "kv_heads", "experts", "moe_d_ff")
+    SUPPORTED = ("d_ff", "heads", "kv_heads", "experts", "moe_d_ff",
+                 "ssm_heads")
 
     def __init__(self, windows, backend: Optional[str] = None):
         self.windows = {}
@@ -233,6 +234,27 @@ def mlp_apply_windowed(p, x, spec: AxisWindow, act="silu", backend=None):
     return mlp_apply_rolling(p, x, spec.offset, spec.win, act,
                              backend=backend,
                              assume_aligned=spec.aligned(min(128, spec.win)))
+
+
+def head_proj(x, w, spec, backend=None):
+    """``x [..., D] @ w [D, H, hd]`` restricted to the contiguous head
+    window ``spec`` (an :class:`AxisWindow` in head units) —
+    ``dispatch.rolling_matmul`` on the head-flattened ``[D, H*hd]`` layout,
+    so the inactive heads' columns are never read from HBM and the custom
+    VJP scatter-adds ``dW`` back into the full layout (exact zeros outside
+    the window).  Shared by GQA q/k/v (``models.attention``), MLA's
+    per-head up-projections, and the SSM head projections
+    (``models.ssm``)."""
+    if spec is None:
+        return jnp.einsum("...d,dhe->...he", x, w)
+    from repro.kernels.dispatch import rolling_matmul  # lazy: no import cycle
+    D, H, hd = w.shape
+    lead = x.shape[:-1]
+    win = spec.win * hd
+    y = rolling_matmul(x.reshape(-1, D), w.reshape(D, H * hd),
+                       spec.offset * hd, win, backend=backend,
+                       assume_aligned=spec.aligned(min(128, win), hd))
+    return y.reshape(*lead, spec.win, hd)
 
 
 # ---------------------------------------------------------------------------

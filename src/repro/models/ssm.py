@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ParamBuilder, rms_norm
+from repro.models.layers import ParamBuilder, head_proj, rms_norm
 
 
 def ssm_params(b: ParamBuilder, prefix, cfg, layers=0):
@@ -63,6 +63,29 @@ def _projections(p, x):
     Br = x @ p["w_B"]
     Cr = x @ p["w_C"]
     dt_raw = x @ p["w_dt"] + p["dt_bias"]
+    return z, xr, Br, Cr, dt_raw
+
+
+def _projections_windowed(p, x, spec, backend=None):
+    """Windowed SSD projections: the ``ssm_heads`` window restricted to the
+    FULL weights.  z/x run through the head-flattened rolling matmul
+    (:func:`repro.models.layers.head_proj`); dt is the same window on the
+    2-D ``[D, nh]`` layout (``dispatch.rolling_matmul``); B/C/state are
+    shared across heads (ngroups=1) and stay full.  Inactive heads' columns
+    are never read from HBM, and the custom VJP scatters their gradients
+    back as exact zeros — the fused-round fill-in contract."""
+    from repro.kernels.dispatch import rolling_matmul  # lazy: no import cycle
+    z = head_proj(x, p["w_z"], spec, backend)
+    xr = head_proj(x, p["w_x"], spec, backend)
+    Br = x @ p["w_B"]
+    Cr = x @ p["w_C"]
+    lead = x.shape[:-1]
+    dt_win = rolling_matmul(
+        x.reshape(-1, x.shape[-1]), p["w_dt"], spec.offset, spec.win,
+        backend=backend, assume_aligned=spec.aligned(min(128, spec.win)))
+    dt_bias = jax.lax.dynamic_slice_in_dim(p["dt_bias"], spec.offset,
+                                           spec.win, 0)
+    dt_raw = dt_win.reshape(*lead, spec.win) + dt_bias
     return z, xr, Br, Cr, dt_raw
 
 
@@ -118,22 +141,51 @@ def ssd_chunked(xr, dt, A, Br, Cr, chunk):
     return y.astype(xr.dtype), hT
 
 
-def ssm_train(p, x, cfg, return_state=False):
-    """x [B,S,D] -> [B,S,D] (optionally + decode cache)."""
+def ssm_train(p, x, cfg, return_state=False, window=None):
+    """x [B,S,D] -> [B,S,D] (optionally + decode cache).
+
+    ``window`` (a ``WindowMap`` or None) applies an ``ssm_heads`` window on
+    the FULL weights: the windowed SSD projections
+    (:func:`_projections_windowed` — only the active heads' activations
+    are ever computed), the per-head conv / gate / skip / norm / A
+    parameters sliced to the active head range, and ``w_out`` contracting
+    over the active heads only.  The chunked SSD then runs on ``win``
+    heads — identical ops to the extracted compact model, so fused ==
+    extract stays bitwise.  (``kernels.ssd_chunk.ssd_chunk_intra`` also
+    offers a ``head_offset``-prefetch window for callers that keep
+    FULL-width activations and window only the mixer; this training path
+    deliberately windows the projections instead, which never computes
+    the inactive heads at all.)"""
     s = cfg.ssm
-    z, xr, Br, Cr, dt_raw = _projections(p, x)
+    nh_full = p["A_log"].shape[-1]
+    spec = window.get("ssm_heads", nh_full) if window else None
+    if spec is None:
+        z, xr, Br, Cr, dt_raw = _projections(p, x)
+        conv_x, A_log = p["conv_x"], p["A_log"]
+        D_skip, y_norm, w_out = p["D_skip"], p["y_norm"], p["w_out"]
+    else:
+        if return_state:
+            raise ValueError("ssm_heads windows are a training-path "
+                             "feature; prefill/decode use full heads")
+        z, xr, Br, Cr, dt_raw = _projections_windowed(
+            p, x, spec, backend=window.backend)
+        sl = lambda w, d: jax.lax.dynamic_slice_in_dim(  # noqa: E731
+            w, spec.offset, spec.win, d)
+        conv_x, A_log = sl(p["conv_x"], 1), sl(p["A_log"], 0)
+        D_skip, y_norm, w_out = (sl(p["D_skip"], 0), sl(p["y_norm"], 0),
+                                 sl(p["w_out"], 0))
     B, S, nh, hd = xr.shape
     xr = jax.nn.silu(_causal_conv(xr.reshape(B, S, nh * hd),
-                                  p["conv_x"].reshape(s.conv_width, nh * hd))
+                                  conv_x.reshape(s.conv_width, nh * hd))
                      ).reshape(B, S, nh, hd)
     Brc = jax.nn.silu(_causal_conv(Br, p["conv_B"]))
     Crc = jax.nn.silu(_causal_conv(Cr, p["conv_C"]))
     dt = jax.nn.softplus(dt_raw)
-    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    A = -jnp.exp(A_log.astype(jnp.float32))
     y, hT = ssd_chunked(xr, dt, A, Brc, Crc, s.chunk)
-    y = y + p["D_skip"][:, None] * xr
-    y = rms_norm(y * jax.nn.silu(z), p["y_norm"], cfg.norm_eps)
-    out = jnp.einsum("bshe,hed->bsd", y, p["w_out"])
+    y = y + D_skip[:, None] * xr
+    y = rms_norm(y * jax.nn.silu(z), y_norm, cfg.norm_eps)
+    out = jnp.einsum("bshe,hed->bsd", y, w_out)
     if not return_state:
         return out
     cw = s.conv_width

@@ -107,17 +107,17 @@ def build_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Tuple[Dict, Dict]:
 def _attn_any(p, x, cfg, positions, mode, cache=None, pos=None, mesh=None,
               cp=False, valid=None, rope_pos=None, window=None):
     if cfg.mla is not None:
-        if window is not None and (
-                window.get("heads", cfg.n_heads) is not None
-                or window.get("kv_heads", cfg.n_kv_heads) is not None):
-            # MLA's per-head up-projections have no GQA grouping to couple
-            # a window to — refuse rather than silently train full heads.
+        if window is not None and \
+                window.get("kv_heads", cfg.n_kv_heads) is not None:
+            # MLA has no kv_heads axis (all heads share the compressed
+            # kv) — refuse rather than silently ignore the window.
             raise ValueError(
-                "fused head/kv_head windows are not supported for MLA "
-                "attention; window d_ff/moe_d_ff only, or use the "
-                "extract-based round (fused_forward='off')")
+                "MLA attention has no kv_heads axis to window; window the "
+                "standalone heads axis instead (windowed per-head "
+                "up-projections)")
         if mode == "train":
-            return attn.mla_train(p, x, cfg, positions), None
+            return attn.mla_train(p, x, cfg, positions,
+                                  window=window), None
         if mode == "prefill":
             return attn.mla_prefill(p, x, cfg, positions)
         return attn.mla_decode(p, x, cfg, cache, pos, mesh=mesh, cp=cp,
@@ -147,7 +147,7 @@ def block_apply(p, h, cfg, stack, positions, mode="train", cache=None,
     x = rms_norm(h, p["ln1"], cfg.norm_eps)
     if cfg.family == "ssm":
         if mode == "train":
-            out = ssm_mod.ssm_train(p["ssm"], x, cfg)
+            out = ssm_mod.ssm_train(p["ssm"], x, cfg, window=window)
         elif mode == "prefill":
             out, c = ssm_mod.ssm_train(p["ssm"], x, cfg, return_state=True)
             new_cache.update(c)
@@ -161,7 +161,7 @@ def block_apply(p, h, cfg, stack, positions, mode="train", cache=None,
         new_cache.update(acache)
     if cfg.hybrid:
         if mode == "train":
-            s_out = ssm_mod.ssm_train(p["ssm"], x, cfg)
+            s_out = ssm_mod.ssm_train(p["ssm"], x, cfg, window=window)
         elif mode == "prefill":
             s_out, c = ssm_mod.ssm_train(p["ssm"], x, cfg, return_state=True)
             new_cache.update(c)

@@ -55,7 +55,8 @@ def test_compat_sole_tpu_importer():
     # the sweep must keep covering every kernel module, in particular the
     # rolling-matmul forward AND the newer backward kernel
     for mod in ("rolling_matmul.py", "rolling_matmul_bwd.py",
-                "masked_update.py", "ssd_chunk.py", "dispatch.py"):
+                "rolling_matmul_batched.py", "masked_update.py",
+                "ssd_chunk.py", "dispatch.py"):
         assert os.path.join("repro", "kernels", mod) in scanned, mod
 
 

@@ -1,0 +1,136 @@
+"""Docs ↔ code sync pins.
+
+The README fused-coverage matrix is a public claim about what
+``WindowFedAvg._resolve_fused`` does; this module parses the actual
+markdown table and asserts every row against ``api.fed_round``
+resolution, so the matrix cannot drift from the code (and vice versa).
+The docs/ tree's link integrity and package coverage are additionally
+enforced by the CI ``policy`` job; the structural pins here keep them
+testable offline.
+"""
+import os
+import re
+from dataclasses import replace
+
+import pytest
+
+from repro import api
+from repro.configs.base import SubmodelConfig, get_reduced_config
+from repro.core.fedavg import MaskFedAvg, WindowFedAvg
+from repro.models import build_model
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _read(*parts):
+    with open(os.path.join(ROOT, *parts)) as fh:
+        return fh.read()
+
+
+def _matrix_rows():
+    md = _read("README.md")
+    m = re.search(r"<!-- fused-coverage-matrix:begin -->(.*?)"
+                  r"<!-- fused-coverage-matrix:end -->", md, re.S)
+    assert m, "README.md lost the fused-coverage-matrix markers"
+    rows = []
+    for line in m.group(1).strip().splitlines():
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if len(cells) != 4 or cells[0] in ("windowed axes", "---"):
+            continue
+        if set(cells[0]) <= {"-"}:
+            continue
+        axes, family, scheme, arm = cells
+        arch = re.search(r"\(([^)]+)\)", family).group(1)
+        stagger = scheme.endswith("+stagger")
+        rows.append((axes, arch, scheme.removesuffix("+stagger"), stagger,
+                     arm))
+    assert len(rows) >= 10, f"matrix unexpectedly small: {rows}"
+    return rows
+
+
+_MODELS = {}
+
+
+def _model(arch):
+    if arch not in _MODELS:
+        _MODELS[arch] = build_model(
+            replace(get_reduced_config(arch), n_layers=2), remat=False)
+    return _MODELS[arch]
+
+
+@pytest.mark.parametrize("axes,arch,scheme,stagger,arm",
+                         _matrix_rows(),
+                         ids=lambda v: str(v).replace(" ", ""))
+def test_readme_fused_coverage_matrix_row(axes, arch, scheme, stagger, arm):
+    """Each README matrix row must match what fed_round actually resolves."""
+    m = _model(arch)
+    kw = {} if axes == "default" else {"axes": tuple(axes.split("+"))}
+    scfg = SubmodelConfig(scheme=scheme, capacity=0.5, local_steps=2,
+                          clients_per_round=4, stagger=stagger, **kw)
+    fed = api.fed_round(m, scfg)
+    if arm == "mask":
+        assert isinstance(fed, MaskFedAvg)
+        return
+    assert isinstance(fed, WindowFedAvg)
+    if arm == "fused":
+        assert fed.use_fused, f"README claims fused for {axes}/{arch}/{scheme}"
+    elif arm == "extract":
+        assert not fed.use_fused, \
+            f"README claims extract for {axes}/{arch}/{scheme}"
+        with pytest.raises(ValueError):
+            api.fed_round(m, scfg, fused_forward="on")
+    else:
+        pytest.fail(f"unknown round arm {arm!r} in README matrix")
+
+
+def test_matrix_covers_every_supported_axis():
+    """Every axis WindowMap supports (and the unsupported-example d_model)
+    appears BY NAME in some matrix row's axes cell, so adding a fused axis
+    without updating the README fails here."""
+    from repro.models.layers import WindowMap
+    axes_cells = " ".join(r[0] for r in _matrix_rows())
+    for name in tuple(WindowMap.SUPPORTED) + ("d_model",):
+        assert name in axes_cells, f"README matrix has no {name} row"
+
+
+def test_docs_tree_exists_and_links_resolve():
+    """docs/ pages exist and their relative links point at real files
+    (the same invariant the CI policy job greps, testable offline)."""
+    for page in ("architecture.md", "paper_map.md", "benchmarks.md"):
+        assert os.path.exists(os.path.join(ROOT, "docs", page)), page
+    for f in ("README.md", "ROADMAP.md", "docs/architecture.md",
+              "docs/paper_map.md", "docs/benchmarks.md"):
+        base = os.path.dirname(os.path.join(ROOT, f))
+        for link in re.findall(r"\]\(([^)#]+)\)", _read(f)):
+            if link.startswith("http"):
+                continue
+            assert os.path.exists(os.path.join(base, link)), \
+                f"{f}: broken link -> {link}"
+
+
+def test_architecture_doc_covers_every_package():
+    """docs/architecture.md names every src/repro package (CI greps the
+    same; pinned here so the suite catches it before CI does)."""
+    doc = _read("docs", "architecture.md")
+    pkgs = sorted(
+        d for d in os.listdir(os.path.join(ROOT, "src", "repro"))
+        if os.path.isdir(os.path.join(ROOT, "src", "repro", d))
+        and not d.startswith("__"))
+    assert pkgs, "src/repro packages not found"
+    for pkg in pkgs:
+        assert pkg in doc, f"docs/architecture.md does not mention {pkg}"
+
+
+def test_paper_map_pointers_resolve():
+    """Every `src/...`/`benchmarks/...`/`tests/...` path named in
+    docs/paper_map.md exists, and cited `file.py:line` anchors stay within
+    the file."""
+    doc = _read("docs", "paper_map.md")
+    for path, line in re.findall(
+            r"`((?:src|benchmarks|tests)/[\w/\.]+\.py)(?::(\d+))?`", doc):
+        full = os.path.join(ROOT, path)
+        assert os.path.exists(full), f"paper_map names missing file {path}"
+        if line:
+            with open(full) as fh:
+                n = sum(1 for _ in fh)
+            assert int(line) <= n, f"{path}:{line} beyond EOF ({n} lines)"

@@ -82,6 +82,27 @@ def test_ssd_chunk_kernel_vs_jnp(nh, hd, N, Q, nh_block):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("off,win,nh_block", [(2, 4, 2), (4, 4, 0)])
+def test_ssd_chunk_head_window_vs_sliced_oracle(off, win, nh_block):
+    """The head-window arm of the intra-chunk SSD kernel (scalar-prefetch
+    offset shifting the head-block grid) == the jnp SSD on host-sliced
+    heads — the kernel-level form of the windowed SSD projection."""
+    B, S, nh, hd, N, Q = 2, 64, 8, 8, 16, 16
+    xr = jax.random.normal(jax.random.PRNGKey(0), (B, S, nh, hd)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (nh,)) * 0.3)
+    Br = jax.random.normal(jax.random.PRNGKey(3), (B, S, N)) * 0.5
+    Cr = jax.random.normal(jax.random.PRNGKey(4), (B, S, N)) * 0.5
+    yw, hw = ops.ssd_chunk_scan(xr, dt, A, Br, Cr, Q, nh_block=nh_block,
+                                head_offset=off, head_win=win)
+    ys, hs = ssd_chunked(xr[:, :, off:off + win], dt[:, :, off:off + win],
+                         A[off:off + win], Br, Cr, Q)
+    np.testing.assert_allclose(np.asarray(yw), np.asarray(ys),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hw), np.asarray(hs),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_ssd_vs_sequential_oracle():
     """Chunked SSD (jnp and Pallas paths) == step-by-step recurrence."""
     B, S, nh, hd, N, Q = 2, 64, 4, 8, 16, 16

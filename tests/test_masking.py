@@ -126,3 +126,30 @@ def test_grid_multiple_alignment_certificate():
                                       axes=("d_ff",), align=8),
                        {("d_ff", 100): None})
     assert tail.grid_multiple(("d_ff", 100)) % 8 != 0
+
+
+def test_importance_stagger_per_client_grid():
+    """Staggered importance: clients take the mass-ranked grid windows
+    (client 0 keeps the argmax window), all offsets stay on the grid so
+    the fused batched-offset arm's alignment certificate holds."""
+    scfg = SubmodelConfig(scheme="importance", capacity=0.25, axes=("d_ff",),
+                          stagger=True)
+    dims = {("d_ff", 96): None}
+    sch = make_scheme(scfg, dims)
+    # concentrate squared mass in the LAST window so ranking is visible
+    w = np.zeros(96, np.float32)
+    w[72:] = 10.0
+    w[:24] = 1.0
+    params = {"w1": jnp.asarray(np.tile(w, (32, 1)))}
+    offs = sch.importance_offsets(params, {"w1": ("d_model", "d_ff")}, 4)
+    per_client = np.asarray(offs[("d_ff", 96)])
+    grid = np.asarray(sch.grids[("d_ff", 96)])
+    # every client offset is a grid entry; the best window goes to client 0
+    assert all(o in grid for o in per_client)
+    assert per_client[0] == 72
+    assert len(set(per_client.tolist())) > 1
+    # non-staggered keeps the broadcast argmax behavior
+    plain = make_scheme(SubmodelConfig(scheme="importance", capacity=0.25,
+                                       axes=("d_ff",)), dims)
+    offs_p = plain.importance_offsets(params, {"w1": ("d_model", "d_ff")}, 4)
+    assert (np.asarray(offs_p[("d_ff", 96)]) == 72).all()
