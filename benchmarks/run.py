@@ -16,6 +16,8 @@ Paper artifacts (CPU-feasible scale of §5's protocol):
 System benches:
   kernels              Pallas kernels vs jnp oracle timings (interpret mode)
   fed_round            window-mode fed round wall time (reduced arch)
+  fed_round_mesh       shard_map round on a forced-host-device mesh:
+                       bitwise gate vs single device + 2k-client scale arm
   roofline             aggregate the dry-run JSONs into the roofline table
 
 Prints ``name,metric,value`` CSV rows and writes
@@ -479,6 +481,120 @@ def fed_round_fused(rounds):
          int(smax == 0.0))
 
 
+def fed_round_mesh(rounds):
+    """The fed round under shard_map on a clients x model host mesh.
+
+    Two arms:
+
+    * correctness — the fused transformer round on the mesh must be
+      bitwise-equal to the single-device round (``mesh_round_bitwise_equal``
+      gates CI, together with the scale arm's gather check);
+    * scale — 2048 simulated clients on a staggered-rolling MLP triple,
+      vmap (single device) vs shard_map gather vs shard_map psum round
+      times, inputs pre-placed with ``sharding.policy.round_input_shardings``.
+
+    Run under forced host devices (main() forces 8 when this bench is
+    selected; REPRO_HOST_DEVICES overrides the count).
+    """
+    import jax
+    import jax.numpy as jnp
+    from dataclasses import replace
+    from repro import api
+    from repro.configs.base import SubmodelConfig, get_reduced_config
+    from repro.data.synthetic import lm_batches
+    from repro.launch.mesh import host_mesh
+    from repro.models import build_model
+    from repro.sharding.policy import round_input_shardings
+
+    n_dev = len(jax.devices())
+    mesh = host_mesh(str(n_dev))
+    emit("fed_round_mesh", "devices", n_dev)
+
+    def time_round(fed, params, batch, n=3, **kw):
+        step = jax.jit(fed.round)
+        new, _ = step(params, batch, 0, jax.random.PRNGKey(1), **kw)
+        jax.block_until_ready(jax.tree_util.tree_leaves(new)[0])
+        t0 = time.time()
+        for _ in range(n):
+            new, _ = step(params, batch, 0, jax.random.PRNGKey(1), **kw)
+        jax.block_until_ready(jax.tree_util.tree_leaves(new)[0])
+        return new, (time.time() - t0) / n * 1e3
+
+    def maxdelta(t1, t2):
+        return max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+            jax.tree_util.tree_leaves(t1), jax.tree_util.tree_leaves(t2)))
+
+    # -- arm 1: fused transformer round, mesh == single device bitwise -------
+    cfg = replace(get_reduced_config("tinyllama_1_1b"), n_layers=2,
+                  head_dim=16)
+    m = build_model(cfg, remat=False)
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=8, client_lr=0.05, stagger=True)
+    it = lm_batches(cfg.vocab, (2, 8, 2), 64)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    single = api.fed_round(m, scfg, fused_forward="on")
+    sharded = api.fed_round(m, scfg, fused_forward="on", mesh=mesh)
+    out_s, _ = time_round(single, params, batch, n=1)
+    out_m, _ = time_round(sharded, params, batch, n=1)
+    fused_delta = maxdelta(out_s, out_m)
+    emit("fed_round_mesh", "fused_round_maxdelta", f"{fused_delta:.2e}")
+
+    # -- arm 2: 2048 simulated clients, vmap vs gather vs psum ---------------
+    C = 2048 if C_OVERRIDE is None else C_OVERRIDE
+    d_in, d_h = 32, 1024
+    kp = jax.random.PRNGKey(3)
+    tparams = {"w1": jax.random.normal(kp, (d_in, d_h)) * 0.1,
+               "b1": jnp.zeros((d_h,)),
+               "w2": jax.random.normal(jax.random.fold_in(kp, 1),
+                                       (d_h,)) * 0.1}
+    ab = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tparams)
+    axes = {"w1": ("d_model", "d_ff"), "b1": ("d_ff",), "w2": ("d_ff",)}
+
+    def loss(w, b):
+        h = jnp.tanh(b["x"] @ w["w1"] + w["b1"])
+        r = h @ w["w2"] - b["y"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    rngb = np.random.default_rng(0)
+    tbatch = {"x": jnp.asarray(rngb.standard_normal((1, C, 4, d_in)),
+                               jnp.float32),
+              "y": jnp.asarray(rngb.standard_normal((1, C, 4)), jnp.float32)}
+    tscfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=1,
+                           clients_per_round=C, client_lr=0.05,
+                           stagger=True)
+    model = (loss, ab, axes)
+    emit("fed_round_mesh", "clients", C)
+
+    vmap_fed = api.fed_round(model, tscfg)
+    out_v, t_v = time_round(vmap_fed, tparams, tbatch)
+    emit("fed_round_mesh", "vmap_round_ms", round(t_v, 1))
+
+    params_sh, batch_sh = round_input_shardings(mesh, "data", ab, tbatch)
+    mparams = jax.device_put(tparams, params_sh)
+    mbatch = jax.device_put(tbatch, batch_sh)
+    gather_fed = api.fed_round(model, tscfg, mesh=mesh)
+    out_g, t_g = time_round(gather_fed, mparams, mbatch)
+    emit("fed_round_mesh", "mesh_round_ms", round(t_g, 1))
+    emit("fed_round_mesh", "mesh_over_vmap_speedup",
+         round(t_v / t_g, 3))
+    scale_delta = maxdelta(out_v, out_g)
+    emit("fed_round_mesh", "scale_round_maxdelta", f"{scale_delta:.2e}")
+
+    psum_fed = api.fed_round(model, tscfg, mesh=mesh, mesh_agg="psum")
+    out_p, t_p = time_round(psum_fed, mparams, mbatch)
+    emit("fed_round_mesh", "psum_round_ms", round(t_p, 1))
+    emit("fed_round_mesh", "psum_round_maxdelta",
+         f"{maxdelta(out_v, out_p):.2e}")
+
+    emit("fed_round_mesh", "mesh_round_bitwise_equal",
+         int(fused_delta == 0.0 and scale_delta == 0.0))
+
+
+C_OVERRIDE = None  # test hook: shrink the scale arm's client count
+
+
 def roofline(rounds):
     files = sorted(glob.glob("experiments/dryrun/*.json"))
     if not files:
@@ -504,28 +620,54 @@ BENCHES = {
     "fed_round": fed_round,
     "fed_round_pallas": fed_round_pallas,
     "fed_round_fused": fed_round_fused,
+    "fed_round_mesh": fed_round_mesh,
     "roofline": roofline,
 }
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (default: all)")
     ap.add_argument("--rounds", type=int, default=12,
                     help="base round budget (--full for paper-scale curves)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     rounds = args.rounds * (5 if args.full else 1)
 
-    names = [args.only] if args.only else list(BENCHES)
+    names = args.only.split(",") if args.only else list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; choose from "
+                 f"{sorted(BENCHES)}")
+    if "fed_round_mesh" in names:
+        # the mesh bench needs >1 device on CPU; the forcing flag must
+        # reach XLA before any bench (lazily) imports jax
+        import sys
+        if "jax" not in sys.modules:
+            n_dev = int(os.environ.get("REPRO_HOST_DEVICES", "8"))
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={n_dev}").strip()
     print("name,metric,value")
     for n in names:
         t0 = time.time()
         BENCHES[n](rounds)
         emit(n, "bench_seconds", round(time.time() - t0, 1))
     os.makedirs("experiments", exist_ok=True)
+    # merge-on-write: partial runs (--only) extend earlier sections instead
+    # of clobbering them, so CI can gate on several invocations' metrics
+    out = {}
+    if os.path.exists("experiments/bench_results.json"):
+        try:
+            with open("experiments/bench_results.json") as f:
+                out = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            out = {}
+    for name, metrics in RESULTS.items():
+        out.setdefault(name, {}).update(metrics)
     with open("experiments/bench_results.json", "w") as f:
-        json.dump(RESULTS, f, indent=1, default=str)
+        json.dump(out, f, indent=1, default=str)
 
 
 if __name__ == "__main__":

@@ -55,8 +55,10 @@ from typing import Any, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import SubmodelConfig
-from repro.core.fedavg import (MaskFedAvg, WindowFedAvg, _build_mask_fed,
-                               _build_window_fed, output_model, run_rounds)
+from repro.core.fedavg import (MESH_AGGS, MaskFedAvg, WindowFedAvg,
+                               _build_mask_fed, _build_window_fed,
+                               output_model, run_rounds)
+from repro.sharding.spmd import axis_size, resolve_client_axis
 from repro.core.server_opt import SERVER_OPTS, ServerOpt
 from repro.core.trainer import Trainer, checkpoint_callback
 from repro.optim.client import (CLIENT_OPTS, ClientOpt, client_momentum,
@@ -132,6 +134,7 @@ def _resolve_server_opt(server_opt, scfg: SubmodelConfig) \
 def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
               client_opt=None, server_opt=None,
               kernel_backend: Optional[str] = None, spmd_axis=None,
+              mesh=None, mesh_agg: str = "gather",
               capacities=None, fused_forward="auto"):
     """Build one federated sub-model round (Algorithms 1 & 2).
 
@@ -151,7 +154,26 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
         keeps its adaptive-scale default.  Consumed by :class:`Trainer`
         (which then steps ``round_with_server_opt``).
       kernel_backend: ``pallas`` | ``jnp`` | ``auto`` (None = env default).
-      spmd_axis: mesh axis pinning the client vmap (window mode only).
+      spmd_axis: mesh axis carrying the per-client dim (window mode only).
+        With ``mesh`` it names the axis ``shard_map`` splits clients over
+        (None derives it: ``clients`` if present, else ``data``, else the
+        leading axis) and must exist on the mesh; without ``mesh`` it is
+        the legacy ``vmap(spmd_axis_name=...)`` annotation.
+      mesh: window mode only — a ``jax.sharding.Mesh``.  The round then
+        executes under ``shard_map``: per-client inputs (batch streams,
+        offset vectors) are split over the ``spmd_axis`` mesh axis, every
+        shard runs the (fused or extract) client phase on its own
+        ``C / axis_size`` clients, and aggregation crosses shards per
+        ``mesh_agg``.  ``scfg.clients_per_round`` must be divisible by the
+        client mesh-axis size.  See ``repro.launch.mesh.make_host_mesh``
+        for CPU test meshes (forced host devices) and
+        ``docs/architecture.md`` § mesh scale-out.
+      mesh_agg: ``gather`` (default) all_gathers the per-client deltas and
+        replays the single-device aggregation — the sharded round is
+        **bitwise-equal** to the ``mesh=None`` round (CI-gated).  ``psum``
+        reduces shard-local f32 scatter-add partials over the client axis
+        — O(model) comm instead of O(C·sub), equal to the single-device
+        round only to fp roundoff.
       capacities: mask mode only — per-client ``[C]`` fractions; defaults
         to ``scfg.capacity`` for every client.
       fused_forward: window mode only — ``"auto"`` (default) routes the
@@ -204,12 +226,27 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
     resolved = resolve_mode(mode, scfg.scheme)
     client_opt = resolve_client_opt(client_opt)
     server_opt = _resolve_server_opt(server_opt, scfg)
+    if mesh_agg not in MESH_AGGS:
+        raise ValueError(f"unknown mesh_agg {mesh_agg!r}; expected one of "
+                         f"{MESH_AGGS}")
+    if mesh is not None:
+        if resolved != "window":
+            raise ValueError("mesh execution applies to window mode only "
+                             "(mask mode is the dense-mask oracle)")
+        spmd_axis = resolve_client_axis(mesh, spmd_axis)
+        n_shards = axis_size(mesh, spmd_axis)
+        if scfg.clients_per_round % n_shards:
+            raise ValueError(
+                f"clients_per_round={scfg.clients_per_round} must be "
+                f"divisible by the {spmd_axis!r} mesh-axis size {n_shards} "
+                f"(each shard runs an equal slice of the client vmap)")
     if resolved == "window":
         if capacities is not None:
             raise ValueError("per-client capacities are a dense-mask-mode "
                              "feature; window mode uses scfg.capacity")
         return _build_window_fed(loss_fn, scfg, abstract, axes_tree,
                                  spmd_axis=spmd_axis,
+                                 mesh=mesh, mesh_agg=mesh_agg,
                                  kernel_backend=kernel_backend,
                                  client_opt=client_opt,
                                  server_opt=server_opt,

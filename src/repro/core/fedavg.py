@@ -35,6 +35,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SubmodelConfig
 from repro.core import extract as ex
@@ -42,7 +43,10 @@ from repro.core import submodel as sm
 from repro.core.masking import WindowScheme, collect_axis_dims, make_scheme
 from repro.kernels import dispatch
 from repro.optim.client import ClientOpt, client_sgd, resolve_client_opt
+from repro.sharding import spmd
 from repro.sharding.policy import constrain_tree
+
+MESH_AGGS = ("gather", "psum")
 
 _SHARED_WINDOW_SCHEMES = ("rolling", "static", "importance")
 
@@ -81,6 +85,18 @@ class WindowFedAvg:
     axes_tree: Any
     scheme: WindowScheme
     spmd_axis: Any = None               # mesh axis pinning the client vmap
+    # Mesh scale-out: with a Mesh attached the round runs under shard_map —
+    # the per-client leading axis (offsets, batch streams, deltas) is split
+    # over the `spmd_axis` mesh axis, each shard runs the client phase on
+    # its own clients, and the aggregation crosses shards per `mesh_agg`:
+    #   "gather" (default) — all_gather the per-client deltas (byte-moving,
+    #     no arithmetic) and replay the exact single-device aggregation, so
+    #     the sharded round is bitwise-equal to the mesh=None round;
+    #   "psum"   — shard-local f32 scatter-add partials psum'd over the
+    #     client axis (O(model) comm instead of O(C·sub); fp-reassociated,
+    #     so equal to the single-device round only to roundoff).
+    mesh: Any = None                    # jax.sharding.Mesh (None = vmap only)
+    mesh_agg: str = "gather"            # gather (exact) | psum (scalable)
     kernel_backend: Optional[str] = None  # pallas | jnp | auto (None = env)
     client_opt: Optional[ClientOpt] = None  # None = the paper's plain SGD
     server_opt: Any = None              # ServerOpt used by Trainer (optional)
@@ -167,7 +183,9 @@ class WindowFedAvg:
             backend=self.kernel_backend)
 
     def _vmap(self, f, **kw):
-        if self.spmd_axis is not None:
+        # under shard_map (mesh path) the client axis is shard-local and
+        # manual — annotating the vmap with a mesh axis name would rebind it
+        if self.spmd_axis is not None and self.mesh is None:
             return jax.vmap(f, spmd_axis_name=self.spmd_axis, **kw)
         return jax.vmap(f, **kw)
 
@@ -179,9 +197,12 @@ class WindowFedAvg:
             return self.scheme.importance_offsets(params, self.axes_tree, C)
         return self.scheme.offsets(rng, round_idx, C)
 
-    def _extract_clients(self, params, offsets):
-        """Per-client compact sub-models, stacked on a leading C axis."""
-        C = self.scfg.clients_per_round
+    def _extract_clients(self, params, offsets, count=None):
+        """Per-client compact sub-models, stacked on a leading C axis.
+
+        ``count`` overrides the stacked-axis length (the shard-LOCAL client
+        count under the mesh round); None keeps the global ``C``."""
+        C = self.scfg.clients_per_round if count is None else count
         if offsets:
             sub0 = self._vmap(
                 lambda off: ex.extract(params, self.axes_tree, off,
@@ -195,7 +216,10 @@ class WindowFedAvg:
     def _client_phase(self, params, batch, offsets):
         """extract → K local-optimizer steps (scan) → delta."""
         c = self.scfg
-        sub0 = self._extract_clients(params, offsets)
+        # client count from the batch layout [K, C, ...]: the global C, or
+        # the shard-local C/S inside the mesh round's shard_map body
+        C = jax.tree_util.tree_leaves(batch)[0].shape[1]
+        sub0 = self._extract_clients(params, offsets, count=C)
         grad_fn = jax.value_and_grad(self.loss_fn, has_aux=True)
         opt = self.client_opt
 
@@ -238,7 +262,8 @@ class WindowFedAvg:
         prefetching its own offset).
         """
         c = self.scfg
-        C = c.clients_per_round
+        # batch layout [K, C, ...]: global C, or shard-local C/S on the mesh
+        C = jax.tree_util.tree_leaves(batch)[0].shape[1]
         full0 = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), params)
         full0 = constrain_tree(full0, self.axes_tree)
@@ -405,11 +430,111 @@ class WindowFedAvg:
         full, _ = jax.lax.scan(acc_step, z, (delta, offsets))
         return full
 
+    # -- mesh scale-out: the client axis under shard_map -----------------------
+
+    def _local_delta_sum(self, delta, offsets, fused):
+        """Shard-local f32 scatter-add of client deltas (no /C) — the
+        summand of the client-axis ``psum``.  Mirrors the per-client scan
+        arms of :meth:`_apply_mean_delta` / ``*_fused`` so that
+        ``psum(local_sum) / C`` is the sharded mean delta."""
+        acc0 = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
+
+        if fused:  # delta already full-shaped, exact 0 outside each window
+            def acc_step(acc, d_c):
+                return jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), acc, d_c), None
+            acc, _ = jax.lax.scan(acc_step, acc0, delta)
+            return acc
+
+        def acc_step(acc, xs):
+            d_c, off_c = xs
+            fd = ex.scatter_delta(d_c, self.abstract, self.axes_tree,
+                                  off_c, self.scheme.sizes)
+            return jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype), acc, fd), None
+
+        acc, _ = jax.lax.scan(acc_step, acc0, (delta, offsets))
+        return acc
+
+    def _client_phase_sharded(self, params, batch, offsets):
+        """The client phase under ``shard_map`` on ``self.mesh``.
+
+        Inputs are split over the client mesh axis — batch leaves
+        ``[K, C, ...]`` on dim 1, offset vectors ``[C]`` on dim 0; server
+        params ride replicated.  Each shard runs the ordinary (fused or
+        extract) client phase on its own C/S clients, so per-shard the
+        fused == extract bitwise contract is exactly the single-device
+        one.  Crossing shards:
+
+        * ``mesh_agg="gather"`` returns the per-client deltas all_gather'd
+          back to the full client axis in client order — pure data
+          movement, so the caller can replay the UNCHANGED single-device
+          aggregation bitwise;
+        * ``mesh_agg="psum"`` returns the f32 scatter-add partial sums
+          psum'd over the client axis (the scalable arm: O(model) comm,
+          fp-reassociated).
+
+        Per-client losses are always gathered exactly ([K, C]).
+        """
+        axis = self.spmd_axis
+        fused = self.use_fused and bool(offsets)
+        psum = self.mesh_agg == "psum"
+
+        def body(p, b, off):
+            phase = self._client_phase_fused if fused else self._client_phase
+            _, delta, losses = phase(p, b, off)
+            losses = jax.lax.all_gather(losses, axis, axis=1, tiled=True)
+            if psum:
+                part = self._local_delta_sum(delta, off, fused)
+                return jax.lax.psum(part, axis), losses
+            delta = jax.tree_util.tree_map(
+                lambda d: jax.lax.all_gather(d, axis, axis=0, tiled=True),
+                delta)
+            return delta, losses
+
+        fn = spmd.shard_map(
+            body, self.mesh,
+            in_specs=(P(), P(None, axis), P(axis)),
+            out_specs=P())
+        return fn(params, batch, offsets)
+
+    def _round_mesh(self, params, batch, offsets):
+        """One round with the client axis sharded over ``self.mesh``."""
+        c = self.scfg
+        out, losses = self._client_phase_sharded(params, batch, offsets)
+        if self.mesh_agg == "psum":
+            # out = sum_c scattered delta_c (f32, full-shaped): the same
+            # final update formula as the per-client scan arm
+            new = jax.tree_util.tree_map(
+                lambda w, d: (w + c.server_lr * d / c.clients_per_round
+                              ).astype(w.dtype), params, out)
+        elif self.use_fused and offsets:
+            new = self._apply_mean_delta_fused(params, out, offsets)
+        else:
+            new = self._apply_mean_delta(params, out, offsets)
+        new = sm.project_l2(new, c.proj_radius)
+        return new, {"loss": losses.mean(), "client_loss": losses}
+
+    def _mean_delta_full_mesh(self, params, batch, offsets):
+        """Sharded client phase + full-shaped mean delta (server-opt path)."""
+        out, losses = self._client_phase_sharded(params, batch, offsets)
+        if self.mesh_agg == "psum":
+            full_delta = jax.tree_util.tree_map(
+                lambda d: d / self.scfg.clients_per_round, out)
+        elif self.use_fused and offsets:
+            full_delta = self._mean_delta_full_fused(out)
+        else:
+            full_delta = self._mean_delta_full(params, out, offsets)
+        return full_delta, losses
+
     # -- public rounds (both delegate to the phases above) ---------------------
 
     def round(self, params, batch, round_idx, rng=None):
         """One communication round.  batch leaves: [K, C, ...]."""
         offsets = self._client_offsets(params, round_idx, rng)
+        if self.mesh is not None:
+            return self._round_mesh(params, batch, offsets)
         if self.use_fused and offsets:
             _, delta_full, losses = self._client_phase_fused(params, batch,
                                                              offsets)
@@ -436,7 +561,10 @@ class WindowFedAvg:
                 "no server optimizer attached; pass server_opt= or build "
                 "the round with api.fed_round(..., server_opt=...)")
         offsets = self._client_offsets(params, round_idx, rng)
-        if self.use_fused and offsets:
+        if self.mesh is not None:
+            full_delta, losses = self._mean_delta_full_mesh(params, batch,
+                                                            offsets)
+        elif self.use_fused and offsets:
             _, delta_full, losses = self._client_phase_fused(params, batch,
                                                              offsets)
             full_delta = self._mean_delta_full_fused(delta_full)
@@ -628,7 +756,8 @@ class MaskFedAvg:
 
 
 def _build_window_fed(model_loss_fn, scfg: SubmodelConfig, abstract,
-                      axes_tree, spmd_axis=None, kernel_backend=None,
+                      axes_tree, spmd_axis=None, mesh=None,
+                      mesh_agg="gather", kernel_backend=None,
                       client_opt=None, server_opt=None,
                       windowed_loss_fn=None,
                       fused_forward="auto") -> WindowFedAvg:
@@ -636,7 +765,8 @@ def _build_window_fed(model_loss_fn, scfg: SubmodelConfig, abstract,
     scheme = make_scheme(scfg, dims)
     return WindowFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
                         axes_tree=axes_tree, scheme=scheme,
-                        spmd_axis=spmd_axis, kernel_backend=kernel_backend,
+                        spmd_axis=spmd_axis, mesh=mesh, mesh_agg=mesh_agg,
+                        kernel_backend=kernel_backend,
                         client_opt=client_opt, server_opt=server_opt,
                         windowed_loss_fn=windowed_loss_fn,
                         fused_forward=fused_forward)

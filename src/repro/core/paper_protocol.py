@@ -21,7 +21,7 @@ from repro.configs.base import SubmodelConfig
 from repro.configs.resnet18_cifar import ResNetConfig, reduced as resnet_reduced
 from repro.core.fedavg import MaskFedAvg
 from repro.core.stability import generalization_gap
-from repro.data.federated import FederatedDataset, label_limited_partition
+from repro.data.federated import FederatedDataset
 from repro.data.synthetic import SyntheticCIFAR
 from repro.models.resnet import build_resnet_params, resnet_loss
 
@@ -38,7 +38,9 @@ SCHEME_MAP = {  # paper name -> (scfg scheme, uses scaler)
 class PaperExperiment:
     n_clients: int = 20
     participate: int = 4
+    partition: str = "label"        # label-limited (paper) | dirichlet
     labels_per_client: int = 2      # 2 = high heterogeneity, 5 = low
+    alpha: float = 0.5              # dirichlet only: 0.1 ~ L=2, 0.5 ~ L=5
     capacities: tuple = (1.0, 0.5, 0.25, 0.125, 0.0625)
     k_steps: int = 2
     mb: int = 8
@@ -51,12 +53,11 @@ class PaperExperiment:
     def __post_init__(self):
         self.data = SyntheticCIFAR(self.rcfg.n_classes, self.rcfg.image_size,
                                    self.n_train, self.n_test, seed=self.seed)
-        parts = label_limited_partition(self.data.train["labels"],
-                                        self.n_clients,
-                                        self.labels_per_client,
-                                        seed=self.seed)
-        self.fed_data = FederatedDataset(self.data.train, parts,
-                                         seed=self.seed)
+        self.fed_data = FederatedDataset.from_labels(
+            self.data.train, self.data.train["labels"], self.n_clients,
+            partition=self.partition,
+            labels_per_client=self.labels_per_client, alpha=self.alpha,
+            seed=self.seed)
         rng = np.random.default_rng(self.seed + 7)
         self.client_caps = np.array(
             [self.capacities[i % len(self.capacities)]

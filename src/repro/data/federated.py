@@ -3,9 +3,12 @@
 * ``label_limited_partition`` — each client sees only L of the label set
   (the paper's high/low heterogeneity: CIFAR-10 L=2 vs L=5, equivalent to
   Dirichlet alpha 0.1 / 0.5).
-* ``dirichlet_partition`` — the Dirichlet(alpha) alternative.
+* ``dirichlet_partition`` — the Dirichlet(alpha) alternative (empty
+  clients rebalanced deterministically so every store can serve batches).
 * ``FederatedDataset`` — client stores + round-batch assembly with uniform
-  client sampling (e.g. the paper's 10%-of-100-clients participation).
+  client sampling (e.g. the paper's 10%-of-100-clients participation);
+  ``FederatedDataset.from_labels(..., partition="dirichlet", alpha=0.1)``
+  builds the stores straight from a label vector.
 """
 from __future__ import annotations
 
@@ -38,7 +41,16 @@ def dirichlet_partition(labels, n_clients, alpha, seed=0):
         cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
         for ci, chunk in enumerate(np.split(idx, cuts)):
             parts[ci].extend(chunk)
+    # Small alpha concentrates whole classes on few clients and can leave
+    # others empty; an empty client store breaks round sampling, so move
+    # one sample over from the currently largest part (deterministic).
+    for ci in range(n_clients):
+        while not parts[ci]:
+            donor = max(range(n_clients), key=lambda j: len(parts[j]))
+            parts[ci].append(parts[donor].pop())
     return [np.array(p, np.int64) for p in parts]
+
+PARTITIONS = ("label", "dirichlet")
 
 
 class FederatedDataset:
@@ -48,6 +60,26 @@ class FederatedDataset:
         self.data = data
         self.parts = parts
         self.rng = np.random.default_rng(seed)
+
+    @classmethod
+    def from_labels(cls, data, labels, n_clients, *, partition="label",
+                    labels_per_client=2, alpha=0.5, seed=0):
+        """Partition ``data`` by ``labels`` into ``n_clients`` stores.
+
+        ``partition="label"`` is the paper's label-limited protocol
+        (``labels_per_client`` classes per client); ``"dirichlet"`` is
+        the Dirichlet(``alpha``) alternative — smaller ``alpha`` means
+        more label skew.  Same ``seed`` drives split and round sampling.
+        """
+        if partition not in PARTITIONS:
+            raise ValueError(f"unknown partition {partition!r}; expected "
+                             f"one of {PARTITIONS}")
+        if partition == "label":
+            parts = label_limited_partition(labels, n_clients,
+                                            labels_per_client, seed=seed)
+        else:
+            parts = dirichlet_partition(labels, n_clients, alpha, seed=seed)
+        return cls(data, parts, seed=seed)
 
     @property
     def n_clients(self):

@@ -14,7 +14,32 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
+
+
+def _force_host_devices():
+    """--devices N must reach XLA before the backend initializes, which
+    happens at (transitive) ``import jax`` below — so pre-scan sys.argv
+    here instead of waiting for argparse (same idiom as launch/dryrun.py).
+    """
+    if "jax" in sys.modules:        # backend may already be up; too late
+        return
+    argv = sys.argv
+    for i, a in enumerate(argv):
+        n = None
+        if a == "--devices" and i + 1 < len(argv):
+            n = argv[i + 1]
+        elif a.startswith("--devices="):
+            n = a.split("=", 1)[1]
+        if n is not None:
+            flag = f"--xla_force_host_platform_device_count={int(n)}"
+            os.environ["XLA_FLAGS"] = \
+                (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+            return
+
+
+_force_host_devices()
 
 import jax
 
@@ -22,6 +47,7 @@ from repro import api
 from repro.checkpoint.checkpoint import save as ckpt_save
 from repro.configs.base import SubmodelConfig, get_config, get_reduced_config
 from repro.data.synthetic import lm_batches
+from repro.launch.mesh import host_mesh
 from repro.models import build_model
 
 
@@ -76,6 +102,20 @@ def main():
                     help="rotate the rolling/importance window per client "
                          "(full axis coverage every round; fused via the "
                          "batched-offset rolling matmul)")
+    ap.add_argument("--mesh", default=None, metavar="DATA[xMODEL]",
+                    help="run the round under shard_map on a "
+                         "(data, model) mesh, clients split over the data "
+                         "axis — e.g. '4' or '4x2'; --clients must be "
+                         "divisible by DATA")
+    ap.add_argument("--mesh-agg", default="gather",
+                    choices=["gather", "psum"],
+                    help="cross-shard aggregation: gather is bitwise-"
+                         "equal to the single-device round; psum trades "
+                         "that for O(model) comm at scale")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force this many XLA host-platform devices "
+                         "(CPU mesh testing; must be the first jax init "
+                         "in the process)")
     ap.add_argument("--capacity", type=float, default=0.5)
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=4)
@@ -101,10 +141,12 @@ def main():
                           stagger=args.stagger,
                           shared_window=False if args.no_shared_window
                           else None, **axes_kw)
+    mesh = host_mesh(args.mesh) if args.mesh else None
     fed = api.fed_round(model, scfg, mode=args.mode,
                         client_opt=args.client_opt,
                         server_opt=args.server_opt,
                         kernel_backend=args.kernel_backend,
+                        mesh=mesh, mesh_agg=args.mesh_agg,
                         fused_forward=args.fused_forward)
 
     vision = (cfg.vision_patches, cfg.vision_d) if cfg.vision_stub else None

@@ -15,6 +15,8 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.sharding.spmd import axis_size as _axis_size
+
 _STATE = threading.local()
 
 
@@ -49,17 +51,6 @@ def activation_policy(policy: Optional[ActivationPolicy]):
         yield
     finally:
         _STATE.policy = prev
-
-
-def _axis_size(mesh, name):
-    if name is None:
-        return 1
-    if isinstance(name, tuple):
-        n = 1
-        for a in name:
-            n *= mesh.shape[a]
-        return n
-    return mesh.shape[name]
 
 
 def constrain(x, *axes):

@@ -18,6 +18,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.sharding.ctx import current_policy
+from repro.sharding.spmd import axis_size as _axis_size
 
 
 def default_param_rules(multi_pod: bool = False, fsdp: bool = True) -> dict:
@@ -35,17 +36,6 @@ def default_param_rules(multi_pod: bool = False, fsdp: bool = True) -> dict:
     if fsdp:
         rules["d_model"] = data          # ZeRO-3-style shard of the residual dim
     return rules
-
-
-def _axis_size(mesh: Mesh, name) -> int:
-    if name is None:
-        return 1
-    if isinstance(name, tuple):
-        out = 1
-        for n in name:
-            out *= mesh.shape[n]
-        return out
-    return mesh.shape[name]
 
 
 def leaf_spec(shape, axes, rules, mesh: Mesh) -> P:
@@ -77,6 +67,22 @@ def param_shardings(abstract, axes_tree, rules, mesh: Mesh):
         lambda s: NamedSharding(mesh, s),
         param_specs(abstract, axes_tree, rules, mesh),
         is_leaf=lambda x: isinstance(x, P))
+
+
+def round_input_shardings(mesh: Mesh, axis, abstract, batch):
+    """``NamedSharding`` placement for a mesh fed round's inputs.
+
+    Server params are replicated (every shard trains clients against the
+    same full tree); batch leaves are ``[K, C, ...]`` and split on the
+    client mesh ``axis``.  Used by ``benchmarks/run.py`` and launch code
+    to ``device_put`` round inputs so the jitted ``shard_map`` round
+    starts from the right placement instead of resharding on entry.
+    """
+    rep = NamedSharding(mesh, P())
+    params_sh = jax.tree_util.tree_map(lambda _: rep, abstract)
+    batch_sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P(None, axis)), batch)
+    return params_sh, batch_sh
 
 
 def constrain_tree(tree, axes_tree, leading=("clients",)):

@@ -1,0 +1,83 @@
+"""Non-IID client partitioning (paper §5.1): determinism + label skew."""
+import numpy as np
+import pytest
+
+from repro.data.federated import (FederatedDataset, dirichlet_partition,
+                                  label_limited_partition)
+
+
+def _labels(n=600, n_classes=10, seed=3):
+    return np.random.default_rng(seed).integers(0, n_classes, size=n)
+
+
+def _cover_disjoint(parts, n):
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+
+
+def test_dirichlet_partition_deterministic():
+    y = _labels()
+    a = dirichlet_partition(y, 12, alpha=0.3, seed=5)
+    b = dirichlet_partition(y, 12, alpha=0.3, seed=5)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+    c = dirichlet_partition(y, 12, alpha=0.3, seed=6)
+    assert any(len(pa) != len(pc) or (pa != pc).any()
+               for pa, pc in zip(a, c))
+
+
+@pytest.mark.parametrize("alpha", [0.05, 0.5, 100.0])
+def test_dirichlet_partition_cover_disjoint_nonempty(alpha):
+    y = _labels()
+    parts = dirichlet_partition(y, 16, alpha=alpha, seed=0)
+    _cover_disjoint(parts, len(y))
+    assert all(len(p) > 0 for p in parts)   # rebalanced even at tiny alpha
+
+
+def _mean_label_entropy(parts, labels, n_classes):
+    ents = []
+    for p in parts:
+        counts = np.bincount(labels[p], minlength=n_classes)
+        q = counts / counts.sum()
+        q = q[q > 0]
+        ents.append(-(q * np.log(q)).sum())
+    return float(np.mean(ents))
+
+
+def test_dirichlet_alpha_controls_label_skew():
+    """Smaller alpha -> fewer classes per client (lower label entropy)."""
+    y = _labels(n=2000)
+    skewed = _mean_label_entropy(dirichlet_partition(y, 10, 0.05, seed=1),
+                                 y, 10)
+    mild = _mean_label_entropy(dirichlet_partition(y, 10, 10.0, seed=1),
+                               y, 10)
+    assert skewed < mild - 0.5
+
+
+def test_from_labels_dispatch():
+    y = _labels()
+    data = {"x": np.arange(len(y), dtype=np.float32), "labels": y}
+    fd = FederatedDataset.from_labels(data, y, 8, partition="dirichlet",
+                                      alpha=0.2, seed=4)
+    ref = dirichlet_partition(y, 8, 0.2, seed=4)
+    for pa, pb in zip(fd.parts, ref):
+        np.testing.assert_array_equal(pa, pb)
+    fd2 = FederatedDataset.from_labels(data, y, 8, partition="label",
+                                       labels_per_client=2, seed=4)
+    ref2 = label_limited_partition(y, 8, 2, seed=4)
+    for pa, pb in zip(fd2.parts, ref2):
+        np.testing.assert_array_equal(pa, pb)
+    with pytest.raises(ValueError, match="partition"):
+        FederatedDataset.from_labels(data, y, 8, partition="iid")
+
+
+def test_from_labels_round_batch_shapes():
+    y = _labels(n=200)
+    data = {"x": np.random.default_rng(0).normal(size=(200, 3)).astype(
+        np.float32), "labels": y}
+    fd = FederatedDataset.from_labels(data, y, 10, partition="dirichlet",
+                                      alpha=0.1, seed=0)
+    batch = fd.round_batch(fd.sample_clients(4), k_steps=2, mb_size=5)
+    assert batch["x"].shape == (2, 4, 5, 3)
+    assert batch["labels"].shape == (2, 4, 5)
