@@ -16,6 +16,9 @@ Paper artifacts (CPU-feasible scale of §5's protocol):
 System benches:
   kernels              Pallas kernels vs jnp oracle timings (interpret mode)
   fed_round            window-mode fed round wall time (reduced arch)
+  fed_round_async      FedBuff async server (repro.fleet) vs the sync
+                       barrier: bitwise M=N anchor + rounds/virtual-sec
+                       under straggler fractions {0, 0.25, 0.5}
   fed_round_mesh       shard_map round on a forced-host-device mesh:
                        bitwise gate vs single device + 2k-client scale arm
   roofline             aggregate the dry-run JSONs into the roofline table
@@ -481,6 +484,95 @@ def fed_round_fused(rounds):
          int(smax == 0.0))
 
 
+def fed_round_async(rounds):
+    """The async FedBuff server (repro.fleet) vs the synchronous barrier.
+
+    Two arms:
+
+    * anchor — with M = N and a zero-spread fleet the async round
+      sequence must be bitwise-equal to the ``api.Trainer`` loop
+      (``async_sync_equiv`` gates CI bench-smoke);
+    * throughput — rounds per *virtual* second at straggler fractions
+      {0, 0.25, 0.5} (10x-slow stragglers): the buffered server keeps
+      aggregating off the fast clients while the sync barrier waits for
+      the slowest participant every round, so async throughput must
+      degrade strictly less (``async_degrades_less``).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro import api
+    from repro.configs.base import SubmodelConfig
+
+    d_in, d_h, C, K = 16, 32, 8, 2
+    kp = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(kp, (d_in, d_h)) * 0.3,
+              "b1": jnp.zeros((d_h,)),
+              "w2": jax.random.normal(jax.random.fold_in(kp, 1),
+                                      (d_h,)) * 0.3}
+    ab = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    axes = {"w1": ("d_model", "d_ff"), "b1": ("d_ff",), "w2": ("d_ff",)}
+
+    def loss(w, b):
+        h = jnp.tanh(b["x"] @ w["w1"] + w["b1"])
+        r = h @ w["w2"] - b["y"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=K,
+                          clients_per_round=C, client_lr=0.05)
+    fed = api.fed_round((loss, ab, axes), scfg)
+
+    def stream():
+        rng = np.random.default_rng(0)
+        while True:
+            yield {"x": rng.standard_normal((K, C, 4, d_in)).astype(
+                       np.float32),
+                   "y": rng.standard_normal((K, C, 4)).astype(np.float32)}
+
+    # -- arm 1: the bitwise sync-equivalence anchor --------------------------
+    n_anchor = 6
+    tr = api.Trainer(fed, params, rng=jax.random.PRNGKey(5))
+    p_sync, _ = tr.run(stream(), n_anchor)
+    at = api.AsyncTrainer(fed, params, rng=jax.random.PRNGKey(5))
+    p_async, _ = at.run(stream(), n_anchor)
+    maxdelta = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(p_sync),
+        jax.tree_util.tree_leaves(p_async)))
+    emit("fed_round_async", "anchor_maxdelta", f"{maxdelta:.2e}")
+    emit("fed_round_async", "async_sync_equiv", int(maxdelta == 0.0))
+
+    # -- arm 2: rounds per virtual second vs the barrier ---------------------
+    n_r = max(rounds, 12)
+    fleet_n, M = 16, 4
+    rel = {}
+    for frac in (0.0, 0.25, 0.5):
+        lat = api.LatencyModel(straggler_frac=frac, straggler_mult=10.0,
+                               seed=0)
+        at = api.AsyncTrainer(fed, params, rng=jax.random.PRNGKey(1),
+                              buffer_size=M,
+                              fleet=api.FleetSimulator(fleet_n, lat))
+        _, hist = at.run(stream(), n_r)
+        async_rps = n_r / float(hist[-1]["virtual_time"])
+        sync_secs = api.FleetSimulator(fleet_n, lat).simulate_sync(
+            api.EpochPermutationSampler(fleet_n, seed=0), n_r, cohort=C)
+        sync_rps = n_r / sync_secs
+        tag = f"f{frac:g}"
+        emit("fed_round_async", f"async_rounds_per_vsec_{tag}",
+             round(async_rps, 4))
+        emit("fed_round_async", f"sync_rounds_per_vsec_{tag}",
+             round(sync_rps, 4))
+        emit("fed_round_async", f"mean_staleness_{tag}",
+             round(float(np.mean([h["staleness"] for h in hist])), 3))
+        rel[frac] = (async_rps, sync_rps)
+
+    # throughput retained relative to the straggler-free fleet: the async
+    # server must lose strictly less of it than the barrier at every F > 0
+    a0, s0 = rel[0.0]
+    degrades_less = all(rel[f][0] / a0 > rel[f][1] / s0
+                        for f in (0.25, 0.5))
+    emit("fed_round_async", "async_degrades_less", int(degrades_less))
+
+
 def fed_round_mesh(rounds):
     """The fed round under shard_map on a clients x model host mesh.
 
@@ -620,6 +712,7 @@ BENCHES = {
     "fed_round": fed_round,
     "fed_round_pallas": fed_round_pallas,
     "fed_round_fused": fed_round_fused,
+    "fed_round_async": fed_round_async,
     "fed_round_mesh": fed_round_mesh,
     "roofline": roofline,
 }

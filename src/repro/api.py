@@ -61,6 +61,9 @@ from repro.core.fedavg import (MESH_AGGS, MaskFedAvg, WindowFedAvg,
 from repro.sharding.spmd import axis_size, resolve_client_axis
 from repro.core.server_opt import SERVER_OPTS, ServerOpt
 from repro.core.trainer import Trainer, checkpoint_callback
+from repro.fleet import (STALENESS_POLICIES, SERVER_LR_SCHEDULES,
+                         AsyncTrainer, EpochPermutationSampler,
+                         FleetSimulator, LatencyModel)
 from repro.optim.client import (CLIENT_OPTS, ClientOpt, client_momentum,
                                 client_proximal, client_sgd,
                                 resolve_client_opt)
@@ -71,6 +74,8 @@ __all__ = [
     "ClientOpt", "CLIENT_OPTS", "client_sgd", "client_momentum",
     "client_proximal", "ServerOpt", "SERVER_OPTS",
     "WindowFedAvg", "MaskFedAvg",
+    "AsyncTrainer", "FleetSimulator", "LatencyModel",
+    "EpochPermutationSampler", "STALENESS_POLICIES", "SERVER_LR_SCHEDULES",
 ]
 
 MODES = ("auto", "window", "mask")

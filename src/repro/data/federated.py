@@ -59,7 +59,9 @@ class FederatedDataset:
         arrays per client."""
         self.data = data
         self.parts = parts
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
+        self._sampler = None
 
     @classmethod
     def from_labels(cls, data, labels, n_clients, *, partition="label",
@@ -85,8 +87,25 @@ class FederatedDataset:
     def n_clients(self):
         return len(self.parts)
 
-    def sample_clients(self, n):
-        return self.rng.choice(self.n_clients, size=n, replace=False)
+    def sample_clients(self, n, replace=False):
+        """Participants for one round.
+
+        Default: without replacement ACROSS rounds — consecutive calls
+        walk an epoch permutation of the client set
+        (:class:`repro.fleet.sampler.EpochPermutationSampler`, the
+        provably-better random-reshuffling participation of arXiv
+        2201.11066), so every client participates exactly once per
+        ``ceil(n_clients / n)`` rounds.  ``replace=True`` restores the
+        legacy independent-per-call draw (distinct within a round, but
+        clients can repeat across consecutive rounds)."""
+        if replace:
+            return self.rng.choice(self.n_clients, size=n, replace=False)
+        if self._sampler is None:
+            # numpy-only module; jax never loads through this import
+            from repro.fleet.sampler import EpochPermutationSampler
+            self._sampler = EpochPermutationSampler(self.n_clients,
+                                                    seed=self.seed)
+        return self._sampler.sample(n)
 
     def round_batch(self, clients, k_steps, mb_size):
         """Batch leaves [K, C, mb, ...] for the selected clients."""

@@ -1,0 +1,44 @@
+"""repro.fleet — the asynchronous federated round server (ROADMAP item 2).
+
+Decouples client completion from server application: a virtual-clock
+fleet simulator (`simulator.py`) drives the UNCHANGED fused/extract
+client phase from ``core/fedavg.py`` per dispatch cohort, completed
+deltas land in a FedBuff-style staleness-weighted buffer (`buffer.py`),
+clients are sampled without replacement across rounds by an
+epoch-permutation sampler (`sampler.py`), and the event loop tying them
+together (`server.py`) is surfaced as :class:`repro.api.AsyncTrainer`.
+
+Policy: this package never constructs rounds — it drives the round
+object handed to it, built by ``repro.api.fed_round`` (enforced by the
+CI ``policy`` job and ``tests/test_fleet.py``).
+
+Attribute access is lazy (PEP 562) so numpy-only consumers — e.g.
+``data/federated.py`` routing ``sample_clients`` through
+``fleet.sampler`` — never pay the jax import that ``fleet.server``
+needs.
+"""
+_EXPORTS = {
+    "AsyncTrainer": "repro.fleet.server",
+    "DeltaBuffer": "repro.fleet.buffer",
+    "ClientReport": "repro.fleet.buffer",
+    "STALENESS_POLICIES": "repro.fleet.buffer",
+    "resolve_staleness": "repro.fleet.buffer",
+    "EpochPermutationSampler": "repro.fleet.sampler",
+    "SERVER_LR_SCHEDULES": "repro.fleet.sampler",
+    "resolve_server_lr_schedule": "repro.fleet.sampler",
+    "FleetSimulator": "repro.fleet.simulator",
+    "LatencyModel": "repro.fleet.simulator",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.fleet' has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,93 @@
+"""FedBuff-style delta buffer with staleness-discounted weights.
+
+Completed client reports (per-client window deltas, tagged with the
+server round they were computed *against*) accumulate here; once M of
+the N in-flight clients have reported, the server aggregates the M
+oldest reports — under the plain fill-in average or the pluggable
+``ServerOpt`` — weighting each report by a staleness policy
+``w(τ)`` where ``τ = server_round − round_tag ≥ 0`` is how many
+aggregations landed while the client was computing.
+
+Policy contract (pinned in ``tests/test_fleet.py``): ``w(0) == 1.0``
+exactly (a fresh report is never discounted — this is what keeps the
+M=N zero-spread anchor bitwise-equal to the synchronous round) and
+``w`` is monotone non-increasing in τ.  Default is FedBuff's
+``1/sqrt(1+τ)``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, List, Tuple, Union
+
+import numpy as np
+
+STALENESS_POLICIES = {
+    "inverse_sqrt": lambda tau: 1.0 / math.sqrt(1.0 + tau),
+    "inverse": lambda tau: 1.0 / (1.0 + tau),
+    "constant": lambda tau: 1.0,
+}
+
+
+def resolve_staleness(policy: Union[str, Callable[[float], float]]
+                      ) -> Callable[[float], float]:
+    if callable(policy):
+        return policy
+    if policy not in STALENESS_POLICIES:
+        raise ValueError(
+            f"unknown staleness policy {policy!r}; expected one of "
+            f"{sorted(STALENESS_POLICIES)} or a callable tau -> weight")
+    return STALENESS_POLICIES[policy]
+
+
+@dataclass
+class ClientReport:
+    """One completed client phase: a [1]-leading slice of the cohort's
+    stacked delta/offsets/losses (pure data movement off the stacked
+    phase output — never recomputed per client)."""
+    client_id: int
+    slot: int
+    round_tag: int        # server round the delta was computed against
+    delta: Any            # pytree, leaves [1, ...] (compact or full-shaped)
+    offsets: Any          # {axis_key: [1] int32} ({} for scheme="full")
+    losses: Any           # [K, 1] per-local-step losses
+
+
+class DeltaBuffer:
+    """Accumulates :class:`ClientReport`s; ready once ``m`` arrived.
+
+    Reports aggregate in arrival order (FIFO — the M *oldest* reports
+    form the round, later arrivals wait for the next one), which is what
+    makes the M=N anchor replay the synchronous client order exactly.
+    """
+
+    def __init__(self, m: int, staleness="inverse_sqrt"):
+        if m < 1:
+            raise ValueError(f"buffer size m must be >= 1; got {m}")
+        self.m = m
+        self.staleness = resolve_staleness(staleness)
+        self._reports: List[ClientReport] = []
+
+    def __len__(self) -> int:
+        return len(self._reports)
+
+    def report(self, rep: ClientReport) -> None:
+        self._reports.append(rep)
+
+    def ready(self) -> bool:
+        return len(self._reports) >= self.m
+
+    def take(self, server_round: int
+             ) -> Tuple[List[ClientReport], np.ndarray, np.ndarray]:
+        """Pop the m oldest reports; returns (reports, taus, weights)."""
+        if not self.ready():
+            raise RuntimeError(
+                f"buffer has {len(self._reports)} of {self.m} reports")
+        reps, self._reports = self._reports[:self.m], self._reports[self.m:]
+        taus = np.array([server_round - r.round_tag for r in reps],
+                        np.int64)
+        if (taus < 0).any():
+            raise RuntimeError(f"report from the future: taus={taus}")
+        weights = np.array([self.staleness(float(t)) for t in taus],
+                           np.float64)
+        return reps, taus, weights

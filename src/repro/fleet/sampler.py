@@ -1,0 +1,112 @@
+"""Client sampling without replacement across rounds + server stepsizes.
+
+Malinovsky, Sailanbayev & Richtárik (arXiv 2201.11066, PAPERS.md) prove
+that *random-reshuffling* the client set — each epoch draws one
+permutation of the N clients and consecutive rounds walk through it, so
+every client participates exactly once per epoch — combined with a
+server-side stepsize provably beats independent (with-replacement)
+sampling.  That epoch-permutation structure composes naturally with the
+paper's shuffled window partition (Algorithm 2 permutes the *windows*
+per epoch; this module permutes the *clients*).
+
+Numpy-only on purpose: ``data/federated.py`` routes
+``FederatedDataset.sample_clients`` through this sampler and must not
+pay a jax import for it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Union
+
+import numpy as np
+
+
+class EpochPermutationSampler:
+    """Draw participant sets without replacement across rounds.
+
+    One epoch = one permutation of ``range(n_clients)``; successive
+    :meth:`sample` calls consume consecutive blocks of it and a fresh
+    permutation is drawn when it runs out.  Guarantees
+
+    * within one call the ``n`` drawn clients are distinct (a leftover
+      block is topped up with the non-colliding head of the next
+      permutation, colliding entries deferred);
+    * when ``n`` divides ``n_clients``, every client participates exactly
+      once per ``n_clients / n`` consecutive rounds (the 2201.11066
+      regime);
+    * same seed ⇒ same draw sequence (``np.random.default_rng``).
+
+    >>> s = EpochPermutationSampler(6, seed=0)
+    >>> a, b = s.sample(3), s.sample(3)
+    >>> sorted(np.concatenate([a, b]).tolist())
+    [0, 1, 2, 3, 4, 5]
+    """
+
+    def __init__(self, n_clients: int, seed: int = 0):
+        if n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1; got {n_clients}")
+        self.n_clients = n_clients
+        self.rng = np.random.default_rng(seed)
+        self.epoch = 0          # permutations drawn so far
+        self._pool: list = []   # unconsumed tail of the current permutation
+
+    def sample(self, n: int) -> np.ndarray:
+        if not 0 < n <= self.n_clients:
+            raise ValueError(
+                f"cannot draw {n} distinct clients from {self.n_clients}")
+        while len(self._pool) < n:
+            perm = list(self.rng.permutation(self.n_clients))
+            if self._pool:
+                # keep the imminent draw duplicate-free: entries already in
+                # the leftover block go to the back of the new permutation
+                left = set(self._pool)
+                perm = ([c for c in perm if c not in left]
+                        + [c for c in perm if c in left])
+            self._pool.extend(perm)
+            self.epoch += 1
+        take, self._pool = self._pool[:n], self._pool[n:]
+        return np.array(take, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Server-side stepsize schedules (2201.11066's other half): multiplier on
+# scfg.server_lr per *server* round, folded into the buffered aggregation's
+# per-entry scale.  "constant" is exactly 1.0 so the sync-equivalence anchor
+# stays bitwise.
+# ---------------------------------------------------------------------------
+
+
+def constant() -> Callable[[int], float]:
+    return lambda r: 1.0
+
+
+def inv_sqrt(t0: float = 1.0) -> Callable[[int], float]:
+    """1/sqrt(1 + r/t0) — the classic diminishing server stepsize."""
+    return lambda r: 1.0 / math.sqrt(1.0 + r / t0)
+
+
+def step_decay(gamma: float = 0.5, every: int = 100) -> Callable[[int], float]:
+    return lambda r: gamma ** (r // every)
+
+
+SERVER_LR_SCHEDULES = {
+    "constant": constant,
+    "inv_sqrt": inv_sqrt,
+    "step": step_decay,
+}
+
+
+def resolve_server_lr_schedule(
+        spec: Union[None, str, Callable[[int], float]]
+) -> Callable[[int], float]:
+    """None → constant 1.0; registry name → its default factory; a
+    callable ``round -> multiplier`` passes through."""
+    if spec is None:
+        return constant()
+    if callable(spec):
+        return spec
+    if spec not in SERVER_LR_SCHEDULES:
+        raise ValueError(
+            f"unknown server-lr schedule {spec!r}; expected one of "
+            f"{sorted(SERVER_LR_SCHEDULES)} or a callable round -> float")
+    return SERVER_LR_SCHEDULES[spec]()

@@ -1,0 +1,130 @@
+"""Deterministic virtual-clock fleet simulator.
+
+Models WHEN each dispatched client finishes — per-client latency draws,
+straggler multipliers, dropout/fault injection, retry-after-timeout —
+while the client *computation* stays the UNCHANGED fused/extract
+client phase from ``core/fedavg.py`` (:meth:`FleetSimulator.run_cohort`
+just drives the phase function the server hands it; the simulator never
+touches the numerics).  Every draw is keyed on
+``(seed, client_id, dispatch_seq)`` so fleets replay bit-identically
+across runs and platforms.
+
+The default :class:`LatencyModel` is the zero-spread fleet (every client
+takes exactly ``base`` seconds, no jitter, no stragglers, no dropouts)
+— the regime in which the async server must replay the synchronous
+round sequence bitwise.
+
+``simulate_sync`` is the barrier baseline for the bench arm: the same
+latency draws, but every round waits for its slowest participant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """Per-client completion-time distribution + fault injection.
+
+    duration = base · straggler_mult^[client is a straggler] · jitter
+    where jitter ~ lognormal(0, jitter_sigma) (1.0 when sigma=0).  A
+    dropout (probability ``dropout`` per dispatch) never reports; the
+    slot is reclaimed after ``timeout`` seconds (or at the would-be
+    completion time when no timeout is set).  A successful run slower
+    than ``timeout`` is also abandoned at the timeout (retry-after-
+    timeout: the slot redispatches, usually to a different client).
+    """
+    base: float = 1.0
+    jitter_sigma: float = 0.0
+    straggler_frac: float = 0.0
+    straggler_mult: float = 10.0
+    dropout: float = 0.0
+    timeout: Optional[float] = None
+    seed: int = 0
+
+
+class FleetSimulator:
+    """N virtual clients with deterministic latency/fault draws.
+
+    The straggler set is the first ``round(straggler_frac · n_clients)``
+    entries of a seed-keyed permutation — fixed for the fleet's
+    lifetime, so sweeping ``straggler_frac`` upward only *adds*
+    stragglers (the bench's monotonicity is meaningful).
+    """
+
+    def __init__(self, n_clients: int, latency: LatencyModel = LatencyModel()):
+        if n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1; got {n_clients}")
+        self.n_clients = n_clients
+        self.latency = latency
+        order = np.random.default_rng(latency.seed).permutation(n_clients)
+        k = int(round(latency.straggler_frac * n_clients))
+        self.stragglers = frozenset(int(c) for c in order[:k])
+
+    # -- per-dispatch draws ----------------------------------------------------
+
+    def draw(self, client_id: int, seq: int) -> Tuple[float, bool]:
+        """(wall-clock duration, dropped?) for dispatch number ``seq``."""
+        lm = self.latency
+        rng = np.random.default_rng([lm.seed, int(client_id), int(seq)])
+        dur = lm.base
+        if int(client_id) in self.stragglers:
+            dur *= lm.straggler_mult
+        if lm.jitter_sigma:
+            dur *= float(rng.lognormal(0.0, lm.jitter_sigma))
+        dropped = bool(lm.dropout) and bool(rng.random() < lm.dropout)
+        return float(dur), dropped
+
+    def completion(self, client_id: int, seq: int
+                   ) -> Tuple[float, bool]:
+        """(delay until the slot frees, did a report arrive?).
+
+        Applies the timeout: drops and over-timeout runs free the slot at
+        ``timeout`` with no report (retry happens on redispatch)."""
+        dur, dropped = self.draw(client_id, seq)
+        t = self.latency.timeout
+        if dropped:
+            return (t if t is not None else dur), False
+        if t is not None and dur > t:
+            return t, False
+        return dur, True
+
+    # -- driving the client computation ---------------------------------------
+
+    def run_cohort(self, phase_fn, params, batch, offsets):
+        """Execute one dispatch cohort's client phase.
+
+        ``phase_fn`` is the server's (jitted) wrapper around the
+        UNCHANGED ``core/fedavg.py`` client phase — the simulator decides
+        only *when* results land, never *what* they are.  All clients
+        dispatched at the same virtual instant run as ONE stacked call
+        (leaves ``[K, m, ...]``), exactly like the synchronous round —
+        this is what makes the M=N zero-spread anchor bitwise."""
+        return phase_fn(params, batch, offsets)
+
+    # -- the synchronous barrier baseline --------------------------------------
+
+    def simulate_sync(self, sampler, n_rounds: int, cohort: int) -> float:
+        """Virtual seconds for ``n_rounds`` synchronous barrier rounds.
+
+        Each round samples ``cohort`` clients and waits for the slowest;
+        a dropped/over-timeout client is retried (fresh draw, possibly
+        re-sampled) until one run of every slot completes — the
+        worst-case cost of a barrier under faults."""
+        clock, seq = 0.0, 0
+        for _ in range(n_rounds):
+            round_time = 0.0
+            for cid in sampler.sample(cohort):
+                waited = 0.0
+                while True:
+                    delay, ok = self.completion(int(cid), seq)
+                    seq += 1
+                    waited += delay
+                    if ok:
+                        break
+                round_time = max(round_time, waited)
+            clock += round_time
+        return clock

@@ -4,9 +4,13 @@
         --batch 4 --prompt-len 32 --gen 16
 
 Simulates a batched request queue: prefill the batch of prompts, then decode
-tokens autoregressively (greedy).  The same entry point drives the full
-configs on a TPU slice; the `decode_32k` / `long_500k` dry-run shapes lower
-exactly this ``serve_step``.
+tokens autoregressively (greedy).  ``--engine continuous`` routes the same
+request source through the slot-pool continuous batcher
+(`repro.launch.batching`, attention families only) instead of one fixed
+generation-level batch.  Prompts come from the shared request source in
+``launch/specs.py`` (BigramLM streams, codebook stacking, vision patches).
+The same entry point drives the full configs on a TPU slice; the
+`decode_32k` / `long_500k` dry-run shapes lower exactly this ``serve_step``.
 """
 from __future__ import annotations
 
@@ -18,14 +22,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config, get_reduced_config
-from repro.data.synthetic import BigramLM
+from repro.launch.specs import request_queue, sample_prompts
 from repro.models import build_model
+
+
+def _serve_continuous(model, params, args):
+    from repro.launch.batching import ContinuousBatcher
+    lengths = [max(args.prompt_len + (i % 3) - 1, 1)
+               for i in range(args.batch)]
+    reqs = request_queue(model.cfg, lengths, max_new=args.gen,
+                         seed=args.seed)
+    eng = ContinuousBatcher(model, params, batch_slots=min(args.batch, 4),
+                            max_len=max(lengths) + args.gen * args.batch + 8)
+    for r in reqs:
+        eng.submit(r)
+    secs = eng.run()
+    print(f"continuous: {eng.stats.completed} requests, "
+          f"{eng.stats.tokens_generated} tokens in {secs*1e3:.1f} ms "
+          f"({eng.stats.prefills} prefills, {eng.stats.decode_steps} "
+          "decode steps)")
+    print("sample generations (first 2 requests):")
+    print([r.out for r in reqs[:2]])
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--engine", default="batch",
+                    choices=["batch", "continuous"],
+                    help="batch: one generation-level batch; continuous: "
+                         "the slot-pool engine (attention families only)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -38,20 +65,14 @@ def main():
                         remat=False)
     params = model.init(jax.random.PRNGKey(args.seed))
 
+    if args.engine == "continuous":
+        return _serve_continuous(model, params, args)
+
     B, S, G = args.batch, args.prompt_len, args.gen
-    src = BigramLM(cfg.vocab, args.seed)
-    rng = np.random.default_rng(args.seed)
-    if cfg.n_codebooks:
-        prompts = np.stack([src.sample(rng, B, S)
-                            for _ in range(cfg.n_codebooks)], -1)
-    else:
-        prompts = src.sample(rng, B, S)
-    extra = None
-    P = 0
-    if cfg.vision_stub:
-        P = cfg.vision_patches
-        extra = {"patches": jnp.asarray(
-            rng.standard_normal((B, P, cfg.vision_d)), jnp.float32)}
+    prompts, extra = sample_prompts(cfg, B, S, seed=args.seed)
+    if extra is not None:
+        extra = {k: jnp.asarray(v) for k, v in extra.items()}
+    P = cfg.vision_patches if cfg.vision_stub else 0
 
     max_len = P + S + G
     prefill = jax.jit(lambda p, t: model.prefill(p, t, extra,

@@ -1,9 +1,11 @@
 """ShapeDtypeStruct input stand-ins + shardings for every
-(architecture x input shape x mesh) combination — the dry-run contract.
+(architecture x input shape x mesh) combination — the dry-run contract,
+plus the shared synthetic request source (:func:`sample_prompts` /
+:func:`request_queue`) that every serving entry point draws from.
 
 No device allocation happens here: params come from ``Model.abstract_params``
 (eval_shape), inputs are ShapeDtypeStructs, caches from
-``jax.eval_shape(model.init_cache, ...)``.
+``jax.eval_shape(model.init_cache, ...)``; the request source emits numpy.
 """
 from __future__ import annotations
 
@@ -100,6 +102,53 @@ def batch_shardings(batch, mesh, multi_pod):
         return NamedSharding(mesh, P(None, d, *([None] * (x.ndim - 2))))
 
     return jax.tree_util.tree_map(spec, batch)
+
+
+def sample_prompts(cfg: ModelConfig, batch: int, prompt_len: int,
+                   seed: int = 0):
+    """Synthetic prompts matching the architecture's input contract.
+
+    The one place that knows how to draw serving inputs for every family
+    (``launch/serve.py`` and the continuous-batching queue both source
+    from here): BigramLM token streams, stacked ``[B, S, n_codebooks]``
+    for codebook models, and the vision stub's patch tensor as the
+    ``extra`` prefill input.  Returns ``(prompts int32, extra | None)``,
+    both numpy (callers device-put).
+    """
+    from repro.data.synthetic import BigramLM
+    import numpy as np
+    src = BigramLM(cfg.vocab, seed)
+    rng = np.random.default_rng(seed)
+    if cfg.n_codebooks:
+        prompts = np.stack([src.sample(rng, batch, prompt_len)
+                            for _ in range(cfg.n_codebooks)], -1)
+    else:
+        prompts = src.sample(rng, batch, prompt_len)
+    extra = None
+    if cfg.vision_stub:
+        extra = {"patches": rng.standard_normal(
+            (batch, cfg.vision_patches, cfg.vision_d)).astype("float32")}
+    return prompts.astype("int32"), extra
+
+
+def request_queue(cfg: ModelConfig, lengths, max_new: int = 16,
+                  seed: int = 0):
+    """Variable-length :class:`repro.launch.batching.Request` queue.
+
+    One BigramLM draw at the longest length, trimmed per request — the
+    continuous-batching engine's admission/retirement logic needs ragged
+    prompts to be exercised.  Plain token streams only (the slot-pool
+    engine takes no ``extra`` inputs).
+    """
+    from repro.launch.batching import Request
+    if cfg.n_codebooks or cfg.vision_stub:
+        raise ValueError(
+            "request_queue feeds the continuous-batching engine, which "
+            "serves plain token prompts only (no codebook/vision extras)")
+    lengths = list(lengths)
+    prompts, _ = sample_prompts(cfg, len(lengths), max(lengths), seed=seed)
+    return [Request(i, prompts[i, :n], max_new=max_new)
+            for i, n in enumerate(lengths)]
 
 
 def serve_batch(cfg: ModelConfig, shape: ShapeConfig):

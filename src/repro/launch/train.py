@@ -116,6 +116,32 @@ def main():
                     help="force this many XLA host-platform devices "
                          "(CPU mesh testing; must be the first jax init "
                          "in the process)")
+    # Async fleet (repro.fleet): 0 = the synchronous barrier Trainer;
+    # M > 0 aggregates once M of the in-flight --clients report
+    # (FedBuff-style, staleness-discounted).  --async-buffer equal to
+    # --clients with a zero-spread fleet replays the sync loop bitwise.
+    ap.add_argument("--async-buffer", type=int, default=0, metavar="M",
+                    help="aggregate once M in-flight clients report "
+                         "(0 = synchronous barrier rounds)")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="virtual fleet size (0 = --clients)")
+    ap.add_argument("--straggler-frac", type=float, default=0.0,
+                    help="fraction of the fleet running "
+                         "--straggler-mult x slower")
+    ap.add_argument("--straggler-mult", type=float, default=10.0)
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-dispatch client fault probability")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="virtual seconds before a slot abandons its "
+                         "client and redispatches")
+    ap.add_argument("--staleness-policy", default="inverse_sqrt",
+                    choices=sorted(api.STALENESS_POLICIES),
+                    help="weight w(tau) on a delta computed tau rounds "
+                         "ago (w(0)=1)")
+    ap.add_argument("--server-lr-schedule", default="constant",
+                    choices=sorted(api.SERVER_LR_SCHEDULES),
+                    help="server stepsize multiplier per round "
+                         "(2201.11066's server-lr arm)")
     ap.add_argument("--capacity", type=float, default=0.5)
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=4)
@@ -154,12 +180,32 @@ def main():
                     args.seq, seed=args.seed, codebooks=cfg.n_codebooks,
                     vision=vision)
     t0 = time.time()
-    trainer = api.Trainer(
-        fed, params, rng=jax.random.PRNGKey(args.seed + 1),
-        log_every=args.log_every,
-        log_fn=lambda s: print(
-            f"{s} ({(time.time() - t0) / (trainer.round_idx or 1):.2f}"
-            "s/round)", flush=True))
+    if args.async_buffer:
+        if mesh is not None:
+            raise SystemExit("--async-buffer owns the client axis; "
+                             "drop --mesh")
+        fleet = api.FleetSimulator(
+            args.fleet or args.clients,
+            api.LatencyModel(straggler_frac=args.straggler_frac,
+                             straggler_mult=args.straggler_mult,
+                             dropout=args.dropout, timeout=args.timeout,
+                             seed=args.seed))
+        trainer = api.AsyncTrainer(
+            fed, params, rng=jax.random.PRNGKey(args.seed + 1),
+            buffer_size=args.async_buffer, fleet=fleet,
+            staleness=args.staleness_policy,
+            server_lr_schedule=args.server_lr_schedule,
+            log_every=args.log_every,
+            log_fn=lambda s: print(
+                f"{s} ({(time.time() - t0) / (trainer.round_idx or 1):.2f}"
+                "s/round)", flush=True))
+    else:
+        trainer = api.Trainer(
+            fed, params, rng=jax.random.PRNGKey(args.seed + 1),
+            log_every=args.log_every,
+            log_fn=lambda s: print(
+                f"{s} ({(time.time() - t0) / (trainer.round_idx or 1):.2f}"
+                "s/round)", flush=True))
     params, history = trainer.run(it, args.rounds)
     losses = trainer.losses  # history keeps device arrays; sync once here
     if args.ckpt:
@@ -167,7 +213,15 @@ def main():
                   {"arch": args.arch, "rounds": args.rounds,
                    "scheme": args.scheme, "history": losses})
         print("checkpoint ->", args.ckpt)
-    print(json.dumps({"first_loss": losses[0], "last_loss": losses[-1]}))
+    out = {"first_loss": losses[0], "last_loss": losses[-1]}
+    if args.async_buffer:
+        vt = history[-1]["virtual_time"]
+        out.update(virtual_time=vt,
+                   rounds_per_vsec=round(args.rounds / vt, 4) if vt else None,
+                   mean_staleness=round(
+                       sum(h["staleness"] for h in history) / len(history),
+                       3))
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_reduced_config
-from repro.launch.batching import ContinuousBatcher, Request
+from repro.launch.batching import ContinuousBatcher
+from repro.launch.specs import request_queue
 from repro.models import build_model
 
 
@@ -26,12 +27,11 @@ def test_continuous_batching_matches_single_request():
     cfg = get_reduced_config("tinyllama_1_1b")
     model = build_model(cfg, moe_path="dense", remat=False)
     params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
-               for n in (5, 9, 7)]
+    # ragged prompts from the shared request source (launch/specs.py)
+    reqs = request_queue(cfg, (5, 9, 7), max_new=4, seed=0)
+    prompts = [r.prompt for r in reqs]
 
     eng = ContinuousBatcher(model, params, batch_slots=2, max_len=96)
-    reqs = [Request(i, p, max_new=4) for i, p in enumerate(prompts)]
     for r in reqs:
         eng.submit(r)
     eng.run()

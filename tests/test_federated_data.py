@@ -1,9 +1,15 @@
-"""Non-IID client partitioning (paper §5.1): determinism + label skew."""
+"""Non-IID client partitioning (paper §5.1): determinism + label skew,
+plus the epoch-permutation participation pins (sample_clients walks a
+seed-pinned permutation of the client set; arXiv 2201.11066)."""
+import os
+
 import numpy as np
 import pytest
 
 from repro.data.federated import (FederatedDataset, dirichlet_partition,
                                   label_limited_partition)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def _labels(n=600, n_classes=10, seed=3):
@@ -70,6 +76,68 @@ def test_from_labels_dispatch():
         np.testing.assert_array_equal(pa, pb)
     with pytest.raises(ValueError, match="partition"):
         FederatedDataset.from_labels(data, y, 8, partition="iid")
+
+
+def _dataset(n_clients=8, seed=7, n=400):
+    y = _labels(n=n)
+    data = {"x": np.arange(n, dtype=np.float32), "labels": y}
+    return FederatedDataset.from_labels(data, y, n_clients,
+                                        partition="dirichlet", alpha=0.5,
+                                        seed=seed)
+
+
+def test_sample_clients_epoch_permutation():
+    """Default sampling walks an epoch permutation (arXiv 2201.11066):
+    consecutive rounds cover every client before any repeats, and the
+    draw sequence is pinned to the dataset seed."""
+    fd = _dataset()
+    a, b = fd.sample_clients(4), fd.sample_clients(4)
+    assert sorted(np.concatenate([a, b]).tolist()) == list(range(8))
+    c, d = fd.sample_clients(4), fd.sample_clients(4)
+    assert sorted(np.concatenate([c, d]).tolist()) == list(range(8))
+    # determinism: a fresh dataset with the same seed replays the draws
+    replay = _dataset()
+    for got in (a, b, c, d):
+        np.testing.assert_array_equal(got, replay.sample_clients(4))
+    other = _dataset(seed=8)
+    assert any((fd2 != got).any() for fd2, got in zip(
+        (other.sample_clients(4) for _ in range(4)), (a, b, c, d)))
+
+
+def test_sample_clients_nondividing_draws_stay_distinct():
+    fd = _dataset(n_clients=7)
+    for _ in range(10):
+        got = fd.sample_clients(3)
+        assert len(np.unique(got)) == 3
+
+
+def test_sample_clients_replace_legacy_arm():
+    """replace=True keeps the legacy independent per-call draw: distinct
+    within a round, deterministic per seed, untouched by the sampler."""
+    a = _dataset().sample_clients(4, replace=True)
+    b = _dataset().sample_clients(4, replace=True)
+    np.testing.assert_array_equal(a, b)
+    assert len(np.unique(a)) == 4
+    ref = np.random.default_rng(7).choice(8, size=4, replace=False)
+    np.testing.assert_array_equal(a, ref)
+
+
+def test_sample_clients_stays_numpy_only():
+    """Routing sample_clients through repro.fleet.sampler must not drag
+    jax in (fleet/__init__ is lazy); checked in a clean interpreter."""
+    import subprocess
+    import sys
+    code = (
+        "import numpy as np, sys\n"
+        "from repro.data.federated import FederatedDataset\n"
+        "fd = FederatedDataset({'x': np.arange(8.)},\n"
+        "                      [np.array([i]) for i in range(8)])\n"
+        "fd.sample_clients(4)\n"
+        "assert 'jax' not in sys.modules, 'sample_clients imported jax'\n")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
 
 
 def test_from_labels_round_batch_shapes():
