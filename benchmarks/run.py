@@ -353,7 +353,8 @@ def fed_round_pallas(rounds):
 
     # Window projection: fused rolling matmul vs extract-then-matmul oracle.
     D, F, win, off = 128, 512, 256, 128
-    p = {"w_gate": jax.random.normal(kp, (D, F)) * 0.1,
+    p = {"w_gate": jax.random.normal(jax.random.fold_in(kp, 5),
+                                     (D, F)) * 0.1,
          "w_up": jax.random.normal(jax.random.fold_in(kp, 2), (D, F)) * 0.1,
          "w_down": jax.random.normal(jax.random.fold_in(kp, 3),
                                      (F, D)) * 0.1}
@@ -433,9 +434,11 @@ def fed_round_fused(rounds):
     # attention sub stack [C, L, D, hwin, hd] is indistinguishable from
     # the FULL wk/wv tensors whenever hwin == n_kv_heads (capacity 1/G),
     # so a string count over it cannot witness anything.
+    from repro.analysis import hlo_check
+
     C, L, D = scfg.clients_per_round, cfg.n_layers, cfg.d_model
     win = feds["fused"].scheme.sizes[("d_ff", cfg.d_ff)]
-    sub_shapes = [f"f32[{C},{L},{D},{win}]"]
+    sub_shapes = [hlo_check.stacked_shape("f32", C, L, D, win)]
 
     def client_hlo(fed, fused):
         def f(p, b, rng):
@@ -443,16 +446,17 @@ def fed_round_fused(rounds):
             phase = (fed._client_phase_fused if fused
                      else fed._client_phase)
             return phase(p, b, offsets)[1]
-        return jax.jit(f).lower(params, batch,
-                                jax.random.PRNGKey(1)).compile().as_text()
+        return hlo_check.compiled_text(f, params, batch,
+                                       jax.random.PRNGKey(1))
 
     hlo_extract = client_hlo(feds["extract"], False)
     hlo_fused = client_hlo(feds["fused"], True)
-    n_extract = sum(hlo_extract.count(s) for s in sub_shapes)
-    n_fused = sum(hlo_fused.count(s) for s in sub_shapes)
+    n_extract = hlo_check.count(hlo_extract, sub_shapes)
+    n_fused = hlo_check.count(hlo_fused, sub_shapes)
     emit("fed_round_fused", "extract_client_wsub_stacks", n_extract)
     emit("fed_round_fused", "fused_client_wsub_stacks", n_fused)
-    emit("fed_round_fused", "fused_no_wsub_alloc", int(n_fused == 0))
+    emit("fed_round_fused", "fused_no_wsub_alloc",
+         int(hlo_check.absent(hlo_fused, sub_shapes)))
 
     # -- staggered arm: per-client windows through the batched-offset
     # kernels; clients vmap over their own WindowMaps.  Same bitwise

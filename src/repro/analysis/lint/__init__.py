@@ -1,0 +1,33 @@
+"""repro.analysis.lint — AST policy linter for the repro codebase.
+
+Two rule families (see docs/lint.md for the catalog):
+
+* repo policies promoted from the CI ``policy`` job's shell greps
+  (:mod:`repro.analysis.lint.policy`), and
+* JAX hazard rules tuned to bug classes this repo has hit
+  (:mod:`repro.analysis.lint.hazards`).
+
+Run it as ``python -m repro.analysis.lint src tests benchmarks`` or via
+the ``repro-lint`` console script.  Stdlib-only: safe to run in the
+no-install CI policy job.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.analysis.lint import hazards, policy
+from repro.analysis.lint.base import (Rule, Violation, iter_py_files,
+                                      lint_file, run_lint)
+
+REGISTRY: Dict[str, Rule] = {
+    rule.id: rule for rule in (*policy.RULES, *hazards.RULES)
+}
+
+__all__ = [
+    "REGISTRY",
+    "Rule",
+    "Violation",
+    "iter_py_files",
+    "lint_file",
+    "run_lint",
+]

@@ -1,0 +1,209 @@
+"""Shared machinery for the repo linter: violations, the rule registry
+protocol, suppression parsing, and file walking.
+
+Stdlib-only on purpose (ast + pathlib): the CI ``policy`` job runs
+``python -m repro.analysis.lint`` with **no installs** — importing this
+package must never pull in jax or numpy (the ``lazy-jax-import`` rule
+applies to the linter itself).
+
+Module identity: rules that are scoped to repo layout (sole TPU
+importer, fleet layering, hot-path host-sync) key off the path suffix
+starting at the ``repro`` package component — ``repro/kernels/compat.py``
+— so the same rules run unchanged against the real tree and against
+fixture trees materialized under a tmp dir in tests.
+
+Suppression syntax (see docs/lint.md): a violation on line L is waived
+by ``# repro-lint: disable=<rule>[,<rule>...]`` either on line L itself
+or on a comment-only line immediately above it.  Suppressions must name
+the rule; there is no blanket disable.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_\-, ]+)")
+
+
+@dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One lint rule: an id, a one-line summary, and a checker run per
+    module.  ``check(ctx)`` returns raw violations; suppression filtering
+    happens in the driver so every rule gets it for free."""
+    id: str
+    summary: str
+    check: Callable[["ModuleCtx"], List[Violation]]
+
+
+class ModuleCtx:
+    """Per-file context handed to every rule."""
+
+    def __init__(self, path: Path, display: str, tree: ast.Module,
+                 source: str):
+        self.path = path
+        self.display = display
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.module = module_identity(path)
+
+    def is_test(self) -> bool:
+        parts = self.path.parts
+        return "tests" in parts or self.path.name.startswith("test_")
+
+    def violation(self, node: ast.AST, rule: str, message: str) -> Violation:
+        return Violation(self.display, getattr(node, "lineno", 1),
+                         getattr(node, "col_offset", 0), rule, message)
+
+    def suppressed(self, v: Violation, rule_id: str) -> bool:
+        for lineno in (v.line, v.line - 1):
+            if not 1 <= lineno <= len(self.lines):
+                continue
+            line = self.lines[lineno - 1]
+            if lineno != v.line and not line.lstrip().startswith("#"):
+                continue  # the line above only counts if comment-only
+            m = SUPPRESS_RE.search(line)
+            if m and rule_id in {r.strip() for r in m.group(1).split(",")}:
+                return True
+        return False
+
+
+def module_identity(path: Path) -> Optional[str]:
+    """``.../src/repro/kernels/compat.py`` -> ``repro/kernels/compat.py``;
+    None for files outside the ``repro`` package (tests, benchmarks)."""
+    parts = path.parts
+    for i in range(len(parts) - 1, -1, -1):
+        if parts[i] == "repro":
+            return "/".join(parts[i:])
+    return None
+
+
+def iter_py_files(paths: Sequence) -> List[Path]:
+    """Expand files/directories into a sorted list of ``.py`` files."""
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(sorted(
+                f for f in p.rglob("*.py")
+                if "__pycache__" not in f.parts
+                and not any(part.startswith(".") for part in f.parts[len(p.parts):])))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def _display(path: Path) -> str:
+    try:
+        return os.path.relpath(path)
+    except ValueError:  # different drive (windows) — keep absolute
+        return str(path)
+
+
+def lint_file(path, rules: Iterable[Rule]) -> List[Violation]:
+    path = Path(path)
+    source = path.read_text()
+    display = _display(path)
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [Violation(display, e.lineno or 1, e.offset or 0,
+                          "syntax-error", f"cannot parse: {e.msg}")]
+    ctx = ModuleCtx(path, display, tree, source)
+    out: List[Violation] = []
+    for rule in rules:
+        for v in rule.check(ctx):
+            if not ctx.suppressed(v, rule.id):
+                out.append(v)
+    return out
+
+
+def run_lint(paths: Sequence, rules: Optional[Sequence[str]] = None
+             ) -> List[Violation]:
+    """Lint every ``.py`` file under ``paths`` with the selected rules
+    (ids; default all registered).  Returns violations sorted by
+    location."""
+    from repro.analysis.lint import REGISTRY  # late: registry imports us
+    if rules is None:
+        active = list(REGISTRY.values())
+    else:
+        unknown = [r for r in rules if r not in REGISTRY]
+        if unknown:
+            raise ValueError(
+                f"unknown rule id(s) {unknown}; known: {sorted(REGISTRY)}")
+        active = [REGISTRY[r] for r in rules]
+    out: List[Violation] = []
+    for f in iter_py_files(paths):
+        out.extend(lint_file(f, active))
+    return sorted(out, key=lambda v: (v.path, v.line, v.col, v.rule))
+
+
+# -- small AST helpers shared by the rule modules ----------------------------
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``jax.experimental.pallas`` Attribute/Name chain -> dotted string
+    (None when the chain roots in something other than a Name)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def walk_imports(tree: ast.Module):
+    """Yield ``(node, module, names)`` for every import statement at any
+    nesting level: ``import a.b`` -> ("a.b", []); ``from a import b, c``
+    -> ("a", ["b", "c"])."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                yield node, alias.name, []
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:  # relative import — not a repo-policy surface
+                continue
+            yield node, node.module or "", [a.name for a in node.names]
+
+
+def function_scoped_nodes(tree: ast.Module) -> set:
+    """ids of every node nested inside a function/lambda body (used to
+    decide whether an import is module-scope)."""
+    inner: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            for sub in ast.walk(node):
+                if sub is not node:
+                    inner.add(id(sub))
+    return inner
+
+
+def under_type_checking(tree: ast.Module) -> set:
+    """ids of nodes guarded by ``if TYPE_CHECKING:`` (static-only)."""
+    out: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.If):
+            test = dotted(node.test)
+            if test in ("TYPE_CHECKING", "typing.TYPE_CHECKING"):
+                for sub in node.body:
+                    for s in ast.walk(sub):
+                        out.add(id(s))
+    return out

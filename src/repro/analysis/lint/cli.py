@@ -1,0 +1,64 @@
+"""Command-line driver: ``python -m repro.analysis.lint [paths...]``.
+
+Exit code 0 when clean, 1 when violations were found, 2 on usage
+errors.  Under GitHub Actions (``GITHUB_ACTIONS`` set, or ``--github``)
+each violation is additionally emitted as a ``::error`` workflow
+annotation so it shows up inline on the PR diff.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.lint import REGISTRY, run_lint
+
+
+def _annotation(v) -> str:
+    # https://docs.github.com/actions/reference/workflow-commands
+    msg = v.message.replace("%", "%25").replace("\n", "%0A")
+    return (f"::error file={v.path},line={v.line},col={v.col + 1},"
+            f"title=repro-lint {v.rule}::{msg}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST policy + JAX hazard linter for the repro repo")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--rules", metavar="ID[,ID...]",
+                        help="comma-separated rule ids (default: all)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("--github", action="store_true",
+                        help="emit ::error workflow annotations (auto "
+                             "when GITHUB_ACTIONS is set)")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(r) for r in REGISTRY)
+        for rule_id in sorted(REGISTRY):
+            print(f"{rule_id:<{width}}  {REGISTRY[rule_id].summary}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    try:
+        violations = run_lint(args.paths, rules=rules)
+    except ValueError as e:
+        print(f"repro-lint: {e}", file=sys.stderr)
+        return 2
+
+    github = args.github or bool(os.environ.get("GITHUB_ACTIONS"))
+    for v in violations:
+        print(v)
+        if github:
+            print(_annotation(v))
+    if violations:
+        print(f"repro-lint: {len(violations)} violation(s)")
+        return 1
+    print("repro-lint: clean")
+    return 0

@@ -1,0 +1,469 @@
+"""JAX hazard rules tuned to this codebase.
+
+Each rule encodes a bug class this repo has actually hit (or is one
+refactor away from hitting):
+
+* ``host-sync``      — PR 3 moved the trainer's metrics to device arrays
+  because per-round ``float()`` blocked dispatch of the next jitted
+  round; the same regression kept reappearing (fleet event loop).
+* ``bf16-accum``     — PR 3's fill-in quantization bug: accumulating
+  bf16 deltas without an f32 upcast loses the round's signal.
+* ``prng-reuse``     — passing one key to two samplers silently
+  correlates "independent" draws (client masks vs offsets).
+* ``tracer-branch``  — Python ``if`` on a traced value inside a jitted
+  function fails at trace time, or worse, bakes in one branch when the
+  value is concrete during tracing.
+
+These are heuristic static checks, not proofs: they flag the syntactic
+patterns of each bug class in the places where it matters, and the
+``# repro-lint: disable=<rule>`` escape hatch marks the sanctioned
+exceptions (e.g. the trainer's log/eval boundary IS where host syncs
+belong).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.lint.base import ModuleCtx, Rule, Violation, dotted
+
+# -- host-sync ---------------------------------------------------------------
+
+# Hot paths: the jitted round machinery, the async event loop, and the
+# kernel layer.  Everything else (launch scripts, analysis tooling) is
+# allowed to sync freely.
+HOT_PREFIXES = ("repro/core/", "repro/kernels/")
+HOT_MODULES = ("repro/fleet/server.py",)
+
+_NP_ROOTS = {"np", "numpy", "onp"}
+_TRANSFER_ATTRS = {"asarray", "array", "take"}
+_TREE_MAPPERS = {"tree_map", "tree_map_with_path", "tree_multimap"}
+
+
+def _is_hot(module: Optional[str]) -> bool:
+    return bool(module) and (module.startswith(HOT_PREFIXES)
+                             or module in HOT_MODULES)
+
+
+def _np_transfer(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if (isinstance(fn, ast.Attribute) and fn.attr in _TRANSFER_ATTRS
+            and isinstance(fn.value, ast.Name)
+            and fn.value.id in _NP_ROOTS):
+        return f"{fn.value.id}.{fn.attr}"
+    return None
+
+
+def check_host_sync(ctx: ModuleCtx) -> List[Violation]:
+    if not _is_hot(ctx.module):
+        return []
+    out: List[Violation] = []
+
+    def flag(node, what):
+        out.append(ctx.violation(
+            node, "host-sync",
+            f"{what} in a hot-path loop forces a device->host sync per "
+            "iteration; batch the sync at a log/eval/record boundary "
+            "(trainer._record convention) or mark the sanctioned "
+            "boundary with a disable comment"))
+
+    def walk(node, in_loop):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if (isinstance(fn, ast.Attribute) and fn.attr == "item"
+                    and not node.args and not node.keywords):
+                out.append(ctx.violation(
+                    node, "host-sync",
+                    ".item() forces a device->host sync; keep metrics as "
+                    "device arrays (trainer._record convention)"))
+            np_call = _np_transfer(node)
+            if in_loop and np_call:
+                flag(node, f"{np_call}()")
+            if (in_loop and isinstance(fn, ast.Name) and fn.id == "float"
+                    and len(node.args) == 1):
+                flag(node, "float()")
+            # a lambda handed to tree_map runs once per leaf — that IS a
+            # loop, so transfers inside it sync per leaf
+            if (isinstance(fn, ast.Attribute)
+                    and fn.attr in _TREE_MAPPERS):
+                for arg in node.args:
+                    if isinstance(arg, ast.Lambda):
+                        walk(arg.body, True)
+                for child in ast.iter_child_nodes(node):
+                    if not isinstance(child, ast.Lambda):
+                        walk(child, in_loop)
+                return
+        if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+            for child in ast.iter_child_nodes(node):
+                walk(child, True)
+            return
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            for child in ast.iter_child_nodes(node):
+                walk(child, True)
+            return
+        for child in ast.iter_child_nodes(node):
+            walk(child, in_loop)
+
+    walk(ctx.tree, False)
+    return out
+
+
+# -- bf16-accum --------------------------------------------------------------
+
+_REDUCTIONS = {"sum", "mean", "average", "cumsum"}
+_F32_MARKERS = {"float32"}
+
+
+def _mentions(node, names: Set[str]) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in names:
+            return True
+        if isinstance(sub, ast.Name) and sub.id in names:
+            return True
+        if isinstance(sub, ast.Constant) and sub.value in names:
+            return True
+    return False
+
+
+def _touches_bf16(fn: ast.AST) -> bool:
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Attribute) and sub.attr == "bfloat16":
+            return True
+        if isinstance(sub, ast.Name) and sub.id == "bfloat16":
+            return True
+    return False
+
+
+def check_bf16_accum(ctx: ModuleCtx) -> List[Violation]:
+    out: List[Violation] = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _touches_bf16(fn):
+            continue
+        upcast: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and _mentions(node.value,
+                                                          _F32_MARKERS):
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            upcast.add(n.id)
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func) or ""
+            attr = (node.func.attr
+                    if isinstance(node.func, ast.Attribute) else "")
+            # only explicit jnp-level reductions: method-call .sum()/.mean()
+            # is too often a bool count (e.g. (a != b).sum()) to flag
+            is_reduction = (attr in _REDUCTIONS
+                            and d.startswith(("jnp.", "jax.numpy.")))
+            is_scan = d in ("lax.scan", "jax.lax.scan")
+            if not (is_reduction or is_scan):
+                continue
+            if any(kw.arg in ("dtype", "preferred_element_type")
+                   and _mentions(kw.value, _F32_MARKERS)
+                   for kw in node.keywords):
+                continue
+            args = list(node.args)
+            evidence = False
+            for a in args:
+                if _mentions(a, _F32_MARKERS):
+                    evidence = True
+                if any(isinstance(n, ast.Name) and n.id in upcast
+                       for n in ast.walk(a)):
+                    evidence = True
+            if not evidence:
+                what = d or f".{attr}()"
+                out.append(ctx.violation(
+                    node, "bf16-accum",
+                    f"{what} in a bf16-handling function without an "
+                    "explicit f32 dtype or .astype(jnp.float32) upcast — "
+                    "accumulate deltas in f32 and round once (PR 3 "
+                    "fill-in bug class)"))
+    return out
+
+
+# -- prng-reuse --------------------------------------------------------------
+
+_KEY_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                 "wrap_key_data", "clone"}
+_RANDOM_ROOTS = ("jax.random.", "random.", "jr.", "jrandom.")
+
+
+def _sampler_call(node: ast.Call) -> Optional[str]:
+    """Name of the jax.random sampler consuming a key, else None."""
+    d = dotted(node.func)
+    if not d:
+        return None
+    for root in _RANDOM_ROOTS:
+        if d.startswith(root):
+            name = d[len(root):]
+            if "." not in name and name not in _KEY_DERIVERS:
+                return name
+    return None
+
+
+class _PrngScope:
+    def __init__(self):
+        self.gen: Dict[str, int] = {}
+        self.depth: Dict[str, int] = {}
+        self.used: Set[Tuple[str, int]] = set()
+        self._counter = 0
+
+    def bind(self, name, loop_depth):
+        self._counter += 1
+        self.gen[name] = self._counter
+        self.depth[name] = loop_depth
+        self.used.discard((name, self.gen[name]))
+
+    def snapshot(self):
+        return (dict(self.gen), dict(self.depth), set(self.used),
+                self._counter)
+
+    def restore(self, snap):
+        self.gen, self.depth, self.used, self._counter = (
+            dict(snap[0]), dict(snap[1]), set(snap[2]), snap[3])
+
+
+def _assigned_names(target) -> List[str]:
+    """Names actually (re)bound by an assignment target — Store context
+    only, so ``self.rng, sub = ...`` rebinds ``sub`` but not ``self``."""
+    return [n.id for n in ast.walk(target)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)]
+
+
+def check_prng_reuse(ctx: ModuleCtx) -> List[Violation]:
+    out: List[Violation] = []
+
+    def scan_function(fn):
+        scope = _PrngScope()
+        for a in (fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs):
+            scope.bind(a.arg, 0)  # params are keys bound outside any loop
+
+        def key_arg(call) -> Optional[str]:
+            if call.args and isinstance(call.args[0], ast.Name):
+                return call.args[0].id
+            for kw in call.keywords:
+                if kw.arg == "key" and isinstance(kw.value, ast.Name):
+                    return kw.value.id
+            return None
+
+        def consume(name, node, loop_depth):
+            if name not in scope.gen:
+                scope.bind(name, loop_depth)  # param/closure key
+            g = scope.gen[name]
+            if (name, g) in scope.used:
+                out.append(ctx.violation(
+                    node, "prng-reuse",
+                    f"PRNG key '{name}' consumed by a second sampler "
+                    "without an intervening jax.random.split/fold_in — "
+                    "the two draws are identical, not independent"))
+            elif loop_depth > scope.depth[name]:
+                out.append(ctx.violation(
+                    node, "prng-reuse",
+                    f"PRNG key '{name}' is consumed inside a loop but "
+                    "bound outside it — every iteration redraws with the "
+                    "same key; split or fold_in per iteration"))
+            else:
+                scope.used.add((name, g))
+
+        def visit_expr(node, loop_depth):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    sampler = _sampler_call(sub)
+                    if sampler:
+                        name = key_arg(sub)
+                        if name:
+                            consume(name, sub, loop_depth)
+
+        def visit_stmts(stmts, loop_depth):
+            for st in stmts:
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue  # nested defs get their own scope
+                if isinstance(st, ast.Assign):
+                    visit_expr(st.value, loop_depth)
+                    for t in st.targets:
+                        for name in _assigned_names(t):
+                            scope.bind(name, loop_depth)
+                elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+                    if st.value is not None:
+                        visit_expr(st.value, loop_depth)
+                    for name in _assigned_names(st.target):
+                        scope.bind(name, loop_depth)
+                elif isinstance(st, (ast.For, ast.AsyncFor)):
+                    visit_expr(st.iter, loop_depth)
+                    for name in _assigned_names(st.target):
+                        scope.bind(name, loop_depth + 1)
+                    visit_stmts(st.body, loop_depth + 1)
+                    visit_stmts(st.orelse, loop_depth)
+                elif isinstance(st, ast.While):
+                    visit_expr(st.test, loop_depth)
+                    visit_stmts(st.body, loop_depth + 1)
+                    visit_stmts(st.orelse, loop_depth)
+                elif isinstance(st, ast.If):
+                    visit_expr(st.test, loop_depth)
+                    snap = scope.snapshot()
+                    visit_stmts(st.body, loop_depth)
+                    after_body = scope.snapshot()
+                    scope.restore(snap)
+                    visit_stmts(st.orelse, loop_depth)
+                    # merge: a name rebound in either branch gets a fresh
+                    # generation; uses union over surviving generations
+                    body_gen, body_depth, body_used, _ = after_body
+                    for name, g in body_gen.items():
+                        if scope.gen.get(name) != g:
+                            scope.bind(name, min(
+                                body_depth.get(name, loop_depth),
+                                scope.depth.get(name, loop_depth)))
+                    scope.used |= {u for u in body_used
+                                   if scope.gen.get(u[0]) == u[1]}
+                elif isinstance(st, (ast.With, ast.AsyncWith)):
+                    for it in st.items:
+                        visit_expr(it.context_expr, loop_depth)
+                    visit_stmts(st.body, loop_depth)
+                elif isinstance(st, ast.Try):
+                    visit_stmts(st.body, loop_depth)
+                    for h in st.handlers:
+                        visit_stmts(h.body, loop_depth)
+                    visit_stmts(st.orelse, loop_depth)
+                    visit_stmts(st.finalbody, loop_depth)
+                elif isinstance(st, (ast.Return, ast.Expr)):
+                    if st.value is not None:
+                        visit_expr(st.value, loop_depth)
+                else:
+                    for child in ast.iter_child_nodes(st):
+                        if isinstance(child, ast.expr):
+                            visit_expr(child, loop_depth)
+
+        visit_stmts(fn.body, 0)
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan_function(node)
+    return out
+
+
+# -- tracer-branch -----------------------------------------------------------
+
+_JIT_NAMES = {"jit", "jax.jit"}
+_DEVICE_ROOTS = ("jnp.", "jax.numpy.", "jax.lax.", "lax.", "jax.nn.",
+                 "jax.random.")
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "type"}
+
+
+def _jit_target_names(tree) -> Dict[str, bool]:
+    """{function name: jit site has static_arg* kwargs} for every local
+    function passed to jax.jit by name."""
+    out: Dict[str, bool] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and dotted(node.func) in _JIT_NAMES:
+            static = any(kw.arg and kw.arg.startswith("static_arg")
+                         for kw in node.keywords)
+            if node.args and isinstance(node.args[0], ast.Name):
+                name = node.args[0].id
+                out[name] = out.get(name, False) or static
+    return out
+
+
+def _decorated_jit(fn) -> Optional[bool]:
+    """None if not jit-decorated, else whether static_arg* kwargs exist."""
+    for dec in fn.decorator_list:
+        if dotted(dec) in _JIT_NAMES:
+            return False
+        if isinstance(dec, ast.Call):
+            d = dotted(dec.func)
+            if d in _JIT_NAMES:
+                return any(kw.arg and kw.arg.startswith("static_arg")
+                           for kw in dec.keywords)
+            if d in ("functools.partial", "partial") and dec.args:
+                if dotted(dec.args[0]) in _JIT_NAMES:
+                    return any(kw.arg and kw.arg.startswith("static_arg")
+                               for kw in dec.keywords)
+    return None
+
+
+def _test_touches_device(node, device: Set[str]) -> bool:
+    """Does this branch test read a (likely) traced value in a way that
+    needs its runtime content?  Static inspections (.shape/.ndim/len())
+    are pruned."""
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False
+        return _test_touches_device(node.value, device)
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in _STATIC_CALLS:
+            return False
+        d = dotted(fn) or ""
+        if d.startswith(_DEVICE_ROOTS):
+            return True
+        return any(_test_touches_device(c, device)
+                   for c in list(node.args)
+                   + [kw.value for kw in node.keywords])
+    if isinstance(node, ast.Name):
+        return node.id in device
+    return any(_test_touches_device(c, device)
+               for c in ast.iter_child_nodes(node))
+
+
+def check_tracer_branch(ctx: ModuleCtx) -> List[Violation]:
+    out: List[Violation] = []
+    jitted = _jit_target_names(ctx.tree)
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        deco = _decorated_jit(fn)
+        if deco is None and fn.name not in jitted:
+            continue
+        has_static = deco if deco is not None else jitted[fn.name]
+        device: Set[str] = set()
+        if not has_static:
+            device |= {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                       + fn.args.kwonlyargs)
+                       if a.arg not in ("self", "cls")}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                val_device = any(
+                    (isinstance(s, ast.Name) and s.id in device)
+                    or (isinstance(s, ast.Call)
+                        and (dotted(s.func) or "").startswith(_DEVICE_ROOTS))
+                    for s in ast.walk(node.value))
+                for t in node.targets:
+                    for n in _assigned_names(t):
+                        if val_device:
+                            device.add(n)
+                        else:
+                            device.discard(n)
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                if _test_touches_device(node.test, device):
+                    kind = ("while" if isinstance(node, ast.While) else
+                            "if")
+                    out.append(ctx.violation(
+                        node, "tracer-branch",
+                        f"Python `{kind}` on a traced value inside the "
+                        f"jitted function '{fn.name}' — this fails at "
+                        "trace time (or silently bakes in one branch); "
+                        "use jnp.where / jax.lax.cond / lax.select"))
+    return out
+
+
+RULES = [
+    Rule("host-sync",
+         "no .item()/float()/np.asarray per-iteration host syncs in "
+         "hot-path loops (core/, fleet/server.py, kernels/)",
+         check_host_sync),
+    Rule("bf16-accum",
+         "reductions/scans in bf16-handling functions need an explicit "
+         "f32 dtype or upcast",
+         check_bf16_accum),
+    Rule("prng-reuse",
+         "a PRNG key feeds at most one sampler; split/fold_in before "
+         "reuse",
+         check_prng_reuse),
+    Rule("tracer-branch",
+         "no Python if/while on traced values inside jitted functions",
+         check_tracer_branch),
+]

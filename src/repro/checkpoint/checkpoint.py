@@ -10,7 +10,6 @@ import os
 import tempfile
 from typing import Any, Dict, Tuple
 
-import jax
 import numpy as np
 
 
@@ -49,6 +48,8 @@ def _unflatten(flat: Dict[str, Any]):
 
 
 def save(path: str, tree, metadata: dict | None = None):
+    import jax  # deferred: load() is pure numpy and must stay jax-free
+
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(jax.device_get(tree))
     arrays = {}

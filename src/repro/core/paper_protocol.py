@@ -113,6 +113,8 @@ class PaperExperiment:
         params, history = trainer.run(
             self._round_batches(scheme, uniform_cap), rounds)
         curve: List[Dict] = [
+            # post-run results assembly — syncing the curve is the point
+            # repro-lint: disable=host-sync
             {"round": h["round"], "train_loss": float(h["loss"]),
              "test_loss": h["test_loss"], "test_acc": h["test_acc"]}
             for h in history if "test_loss" in h]

@@ -120,6 +120,8 @@ class Trainer:
             r = rec["round"]
             if self.eval_fn and (r == last or (
                     self.eval_every and r % self.eval_every == 0)):
+                # eval boundary: the sanctioned place to sync metrics
+                # repro-lint: disable=host-sync
                 rec.update({k: float(v) for k, v in
                             self.eval_fn(self.params).items()})
             self.history.append(rec)
@@ -127,16 +129,20 @@ class Trainer:
                 cb(r, self.params, rec)
             if self.log_every and (r % self.log_every == 0 or r == last):
                 # the log boundary is where the host sync is allowed
+                # repro-lint: disable=host-sync
                 extras = " ".join(f"{k} {float(v):.4f}"
                                   for k, v in rec.items()
                                   if k not in ("round", "loss")
                                   and np.ndim(v) == 0)
+                # repro-lint: disable=host-sync
                 self.log_fn(f"round {r:4d} loss {float(rec['loss']):.4f}"
                             + (f"  {extras}" if extras else ""))
         return self.params, self.history
 
     @property
     def losses(self) -> List[float]:
+        # reporting accessor, not the hot loop: sync is the point here
+        # repro-lint: disable=host-sync
         return [float(h["loss"]) for h in self.history]
 
 

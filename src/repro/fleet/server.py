@@ -154,6 +154,7 @@ class AsyncTrainer:
         self._events: list = []             # heap of (time, seq, slot, rep)
         self._idle: List[int] = list(range(self._C))
         self._round_offsets: Dict[int, Any] = {}   # tag -> full [C] offsets
+        self._offsets_host: Dict[int, Any] = {}    # host mirror, same tags
         self._fused: Optional[bool] = None  # resolved at first dispatch
         self._phase = None
         self._scatter_fed = None            # shared_window=False clone
@@ -167,11 +168,16 @@ class AsyncTrainer:
         One ``jax.random.split`` per NEW tag — the same rng chain as
         ``Trainer.step``, and one offsets draw per round like the sync
         ``fed.round``; cohorts redispatched against the same tag reuse
-        them (a straggler retry trains the same round's window)."""
+        them (a straggler retry trains the same round's window).
+
+        A host mirror of the tiny [C] int32 vectors is synced here, ONCE
+        per new tag — reports then carry host slices, so the aggregation
+        path's shared-window check never touches the device."""
         if tag not in self._round_offsets:
             self.rng, sub = jax.random.split(self.rng)
-            self._round_offsets[tag] = self.fed._client_offsets(
-                self.params, tag, sub)
+            off = self.fed._client_offsets(self.params, tag, sub)
+            self._round_offsets[tag] = off
+            self._offsets_host[tag] = jax.device_get(off)
         return self._round_offsets[tag]
 
     def _phase_fn(self):
@@ -191,13 +197,17 @@ class AsyncTrainer:
 
     def _next_batch(self, source, ids, slots):
         if callable(source):
-            batch = source(np.asarray(ids))
+            batch = source(ids)  # sampler already yields a host ndarray
         else:
             batch = next(source)
             if len(slots) != self._C or slots != list(range(self._C)):
-                # partial cohort: take the dispatched slots' lanes
+                # partial cohort: take the dispatched slots' lanes — a
+                # device-side gather, so host batches upload once and
+                # device batches never round-trip
+                lanes = jnp.asarray(slots, jnp.int32)
                 batch = jax.tree_util.tree_map(
-                    lambda v: np.take(np.asarray(v), slots, axis=1), batch)
+                    lambda v: jnp.take(jnp.asarray(v), lanes, axis=1),
+                    batch)
         if isinstance(batch, dict):
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
         return batch
@@ -209,9 +219,10 @@ class AsyncTrainer:
         offsets = self._offsets_for(tag)
         if self._fused is None:
             self._fused = self.fed.use_fused and bool(offsets)
-        lanes = jnp.asarray(np.array(slots, np.int32))
+        lanes = jnp.asarray(slots, jnp.int32)
         cohort_off = {k: jnp.take(v, lanes, axis=0)
                       for k, v in offsets.items()}
+        host_off = self._offsets_host[tag]
         batch = self._next_batch(source, ids, slots)
         delta, losses = self.fleet.run_cohort(
             self._phase_fn(), self.params, batch, cohort_off)
@@ -220,7 +231,7 @@ class AsyncTrainer:
             rep = ClientReport(
                 client_id=int(cid), slot=slot, round_tag=tag,
                 delta=_tree_slice(delta, j),
-                offsets={k: v[j:j + 1] for k, v in cohort_off.items()},
+                offsets={k: v[slot:slot + 1] for k, v in host_off.items()},
                 losses=losses[:, j:j + 1]) if ok else None
             heapq.heappush(self._events,
                            (self._clock + delay, self._seq, slot, rep))
@@ -291,16 +302,18 @@ class AsyncTrainer:
         reps, taus, weights = self.buffer.take(r)
         m = len(reps)
         delta = _tree_concat([rep.delta for rep in reps])
-        offsets = ({k: jnp.concatenate([rep.offsets[k] for rep in reps])
-                    for k in reps[0].offsets} if reps[0].offsets else {})
+        # report offsets are host slices (mirrored once per round tag in
+        # _offsets_for): concat on host, upload the [m] vector once
+        off_host = ({k: np.concatenate([rep.offsets[k] for rep in reps])
+                     for k in reps[0].offsets} if reps[0].offsets else {})
+        offsets = {k: jnp.asarray(v) for k, v in off_host.items()}
         losses = jnp.concatenate([rep.losses for rep in reps], axis=1)
 
         # the shared-window mean+single-scatter fast path applies only when
-        # every buffered entry trained the same window (concrete check on
+        # every buffered entry trained the same window (pure host check on
         # the tiny [m] offset vectors; staleness can mix rounds' windows)
         shared_arm = bool(self.fed.shared_window) and bool(offsets) and all(
-            all(np.array_equal(np.asarray(rep.offsets[k]),
-                               np.asarray(reps[0].offsets[k]))
+            all(np.array_equal(rep.offsets[k], reps[0].offsets[k])
                 for k in offsets) for rep in reps[1:])
         denom = m if shared_arm else self._C
         lr_mult = float(self._schedule(r))
@@ -350,19 +363,23 @@ class AsyncTrainer:
                 r = rec["round"]
                 if self.eval_fn and (r == last or (
                         self.eval_every and r % self.eval_every == 0)):
+                    # eval boundary: the sanctioned place to sync metrics
+                    # repro-lint: disable=host-sync
                     rec.update({k: float(v) for k, v in
                                 self.eval_fn(self.params).items()})
                 self.history.append(rec)
                 for cb in self.callbacks:
                     cb(r, self.params, rec)
                 if self.log_every and (r % self.log_every == 0 or r == last):
+                    # log boundary (trainer._record convention)
+                    # repro-lint: disable=host-sync
                     extras = " ".join(f"{k} {float(v):.4f}"
                                       for k, v in rec.items()
                                       if k not in ("round", "loss")
                                       and np.ndim(v) == 0)
-                    self.log_fn(
-                        f"round {r:4d} loss {float(rec['loss']):.4f}"
-                        + (f"  {extras}" if extras else ""))
+                    # repro-lint: disable=host-sync
+                    msg = f"round {r:4d} loss {float(rec['loss']):.4f}"
+                    self.log_fn(msg + (f"  {extras}" if extras else ""))
             ticks += 1
             if ticks > self.max_ticks:
                 raise RuntimeError(
@@ -373,4 +390,6 @@ class AsyncTrainer:
 
     @property
     def losses(self) -> List[float]:
+        # reporting accessor, not the event loop: sync is the point here
+        # repro-lint: disable=host-sync
         return [float(h["loss"]) for h in self.history]

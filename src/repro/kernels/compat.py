@@ -9,7 +9,9 @@ Writing kernels against one spelling makes them dead code on every other
 JAX — exactly what happened to the seed suite.  Kernels therefore never
 touch ``pallas.tpu`` directly; they import the resolved symbols from here.
 
-Policy (enforced by ``tests/test_dispatch.py::test_compat_sole_tpu_importer``):
+Policy (the ``sole-tpu-importer`` rule in ``repro.analysis.lint`` — run
+in CI's ``policy`` job and delegated to by
+``tests/test_dispatch.py::test_compat_sole_tpu_importer``):
 
     all Pallas TPU symbols go through ``repro.kernels.compat``.
 

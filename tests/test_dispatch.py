@@ -7,7 +7,6 @@
 * ``WindowFedAvg.round_with_server_opt`` honors the importance scheme.
 """
 import os
-import re
 
 import jax
 import jax.numpy as jnp
@@ -37,23 +36,20 @@ def test_compat_resolves_on_installed_jax():
 
 
 def test_compat_sole_tpu_importer():
-    """Policy: all Pallas TPU symbols go through kernels/compat.py."""
-    pat = re.compile(r"pallas\.tpu|pallas\s+import\s+tpu")
-    offenders, scanned = [], set()
-    for root, _, files in os.walk(SRC):
-        for f in files:
-            if not f.endswith(".py"):
-                continue
-            path = os.path.join(root, f)
-            if path.endswith(os.path.join("kernels", "compat.py")):
-                continue
-            scanned.add(os.path.relpath(path, SRC))
-            with open(path) as fh:
-                if pat.search(fh.read()):
-                    offenders.append(os.path.relpath(path, SRC))
-    assert not offenders, f"pallas.tpu imported outside compat: {offenders}"
+    """Policy: all Pallas TPU symbols go through kernels/compat.py.
+
+    Thin delegate to the linter's ``sole-tpu-importer`` rule
+    (repro.analysis.lint) so there is one source of truth; this test
+    keeps the policy in the fast tier and pins the sweep's coverage."""
+    from repro.analysis import lint
+
+    offenders = lint.run_lint([SRC], rules=["sole-tpu-importer"])
+    assert not offenders, \
+        f"pallas.tpu imported outside compat: {offenders}"
     # the sweep must keep covering every kernel module, in particular the
     # rolling-matmul forward AND the newer backward kernel
+    scanned = {os.path.relpath(str(p), SRC) for p in
+               lint.iter_py_files([SRC])}
     for mod in ("rolling_matmul.py", "rolling_matmul_bwd.py",
                 "rolling_matmul_batched.py", "masked_update.py",
                 "ssd_chunk.py", "dispatch.py"):

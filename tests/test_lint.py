@@ -1,0 +1,445 @@
+"""repro.analysis.lint — fixture pairs for every rule + repo self-scan.
+
+Each rule gets at least one failing and one passing fixture, written to
+a tmp tree shaped like the real repo (``<tmp>/src/repro/...``) so the
+path-scoped rules (sole-tpu-importer, fleet-layering, host-sync,
+lazy-jax-import) key off the same module identities they see in-tree.
+
+The self-scan test is the acceptance gate: the real tree must be clean,
+and the CLI must exit 0 on it — the CI ``policy`` job runs exactly that.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.lint.cli import main as lint_main
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(REPO, "src")
+
+
+def _write(tmp_path, rel, code):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(code))
+    return p
+
+
+def _rules(tmp_path, rel, code, rules=None):
+    return lint.run_lint([_write(tmp_path, rel, code)], rules=rules)
+
+
+def _ids(violations):
+    return [v.rule for v in violations]
+
+
+# -- registry / driver basics -------------------------------------------------
+
+
+def test_registry_has_all_rules():
+    assert set(lint.REGISTRY) == {
+        "sole-tpu-importer", "api-facade", "fleet-layering",
+        "lazy-jax-import", "host-sync", "bf16-accum", "prng-reuse",
+        "tracer-branch"}
+
+
+def test_unknown_rule_id_rejected():
+    with pytest.raises(ValueError, match="unknown rule"):
+        lint.run_lint([SRC], rules=["no-such-rule"])
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    vs = _rules(tmp_path, "src/repro/core/broken.py", "def f(:\n")
+    assert _ids(vs) == ["syntax-error"]
+
+
+# -- sole-tpu-importer --------------------------------------------------------
+
+
+BAD_TPU = """\
+    from jax.experimental.pallas import tpu as pltpu
+"""
+GOOD_TPU = """\
+    from repro.kernels import compat
+"""
+
+
+def test_sole_tpu_importer_bad(tmp_path):
+    vs = _rules(tmp_path, "src/repro/kernels/rogue.py", BAD_TPU)
+    assert _ids(vs) == ["sole-tpu-importer"]
+    vs = _rules(tmp_path, "src/repro/core/rogue2.py",
+                "import jax.experimental.pallas.tpu as pltpu\n")
+    assert _ids(vs) == ["sole-tpu-importer"]
+
+
+def test_sole_tpu_importer_good(tmp_path):
+    assert _rules(tmp_path, "src/repro/kernels/fine.py", GOOD_TPU) == []
+    # compat.py itself is the sanctioned importer
+    assert _rules(tmp_path, "src/repro/kernels/compat.py", BAD_TPU) == []
+
+
+# -- api-facade ---------------------------------------------------------------
+
+
+def test_api_facade_bad(tmp_path):
+    vs = _rules(tmp_path, "src/repro/launch/rogue.py", """\
+        from repro.core.fedavg import make_window_fed_round
+
+        fed = make_window_fed_round(None, None)
+    """)
+    assert _ids(vs) == ["api-facade", "api-facade"]  # import + call
+
+
+def test_api_facade_good(tmp_path):
+    assert _rules(tmp_path, "src/repro/launch/fine.py", """\
+        from repro import api
+
+        fed = api.fed_round(None, None)
+    """) == []
+    # the factories' home module and tests are exempt
+    assert _rules(tmp_path, "src/repro/core/fedavg.py",
+                  "def make_window_fed_round(m, s):\n    pass\n") == []
+    assert _rules(tmp_path, "tests/test_x.py",
+                  "from repro.core.fedavg import make_window_fed_round\n"
+                  ) == []
+
+
+# -- fleet-layering -----------------------------------------------------------
+
+
+def test_fleet_layering_bad(tmp_path):
+    for code in ("from repro import api\n",
+                 "import repro.api\n",
+                 "from repro.core.fedavg import WindowFedAvg\n",
+                 "from repro.core import fedavg\n"):
+        vs = _rules(tmp_path, "src/repro/fleet/rogue.py", code)
+        assert _ids(vs) == ["fleet-layering"], code
+
+
+def test_fleet_layering_good(tmp_path):
+    assert _rules(tmp_path, "src/repro/fleet/fine.py", """\
+        from repro.core import submodel
+        from repro.fleet.buffer import DeltaBuffer
+    """) == []
+    # the same imports OUTSIDE fleet/ are fine
+    assert _rules(tmp_path, "src/repro/launch/fine.py",
+                  "from repro import api\n") == []
+
+
+# -- lazy-jax-import ----------------------------------------------------------
+
+
+def test_lazy_jax_import_bad(tmp_path):
+    vs = _rules(tmp_path, "src/repro/fleet/sampler.py", """\
+        import jax
+        import numpy as np
+    """)
+    assert _ids(vs) == ["lazy-jax-import"]
+
+
+def test_lazy_jax_import_good(tmp_path):
+    # deferred into the function: fine
+    assert _rules(tmp_path, "src/repro/fleet/sampler.py", """\
+        import numpy as np
+
+        def f(tree):
+            import jax
+            return jax.device_get(tree)
+    """) == []
+    # TYPE_CHECKING-only: fine
+    assert _rules(tmp_path, "src/repro/fleet/buffer.py", """\
+        from typing import TYPE_CHECKING
+
+        if TYPE_CHECKING:
+            import jax
+    """) == []
+    # modules not declared numpy-only may import jax at module scope
+    assert _rules(tmp_path, "src/repro/core/whatever.py",
+                  "import jax\n") == []
+
+
+# -- host-sync ----------------------------------------------------------------
+
+
+def test_host_sync_bad(tmp_path):
+    vs = _rules(tmp_path, "src/repro/core/rogue.py", """\
+        import numpy as np
+
+        def run(history, metrics):
+            out = []
+            for rec in history:
+                out.append(float(rec))
+            x = metrics.item()
+            return out, [np.asarray(h) for h in history]
+    """)
+    assert _ids(vs) == ["host-sync"] * 3
+
+
+def test_host_sync_tree_map_lambda_is_a_loop(tmp_path):
+    vs = _rules(tmp_path, "src/repro/fleet/server.py", """\
+        import jax
+        import numpy as np
+
+        def f(batch, slots):
+            return jax.tree_util.tree_map(
+                lambda v: np.take(np.asarray(v), slots, axis=1), batch)
+    """)
+    assert _ids(vs) == ["host-sync", "host-sync"]
+
+
+def test_host_sync_good(tmp_path):
+    # straight-line float() outside a loop is a boundary, not a hazard
+    assert _rules(tmp_path, "src/repro/core/fine.py", """\
+        def f(metrics):
+            return float(metrics)
+    """) == []
+    # the same loop outside a hot-path module is fine
+    assert _rules(tmp_path, "src/repro/launch/fine.py", """\
+        def f(history):
+            return [float(h) for h in history]
+    """) == []
+
+
+def test_host_sync_suppression(tmp_path):
+    assert _rules(tmp_path, "src/repro/core/fine.py", """\
+        def f(history):
+            # log boundary — the sanctioned sync point
+            # repro-lint: disable=host-sync
+            return [float(h) for h in history]
+    """) == []
+
+
+# -- bf16-accum ---------------------------------------------------------------
+
+
+def test_bf16_accum_bad(tmp_path):
+    vs = _rules(tmp_path, "src/repro/core/rogue.py", """\
+        import jax.numpy as jnp
+
+        def agg(delta):
+            delta = delta.astype(jnp.bfloat16)
+            return jnp.mean(delta, axis=0)
+    """)
+    assert _ids(vs) == ["bf16-accum"]
+    vs = _rules(tmp_path, "src/repro/core/rogue2.py", """\
+        import jax
+        import jax.numpy as jnp
+
+        def agg(deltas):
+            deltas = [d.astype(jnp.bfloat16) for d in deltas]
+            acc, _ = jax.lax.scan(lambda c, d: (c + d, None),
+                                  deltas[0], deltas[1])
+            return acc
+    """)
+    assert _ids(vs) == ["bf16-accum"]
+
+
+def test_bf16_accum_good(tmp_path):
+    # explicit f32 accumulator dtype
+    assert _rules(tmp_path, "src/repro/core/fine.py", """\
+        import jax.numpy as jnp
+
+        def agg(delta):
+            delta = delta.astype(jnp.bfloat16)
+            return jnp.mean(delta, axis=0, dtype=jnp.float32)
+    """) == []
+    # upcast before the reduction
+    assert _rules(tmp_path, "src/repro/core/fine2.py", """\
+        import jax.numpy as jnp
+
+        def agg(delta):
+            delta = delta.astype(jnp.bfloat16)
+            wide = delta.astype(jnp.float32)
+            return jnp.mean(wide, axis=0)
+    """) == []
+    # no bf16 in sight: reductions are unconstrained
+    assert _rules(tmp_path, "src/repro/core/fine3.py", """\
+        import jax.numpy as jnp
+
+        def agg(delta):
+            return jnp.mean(delta, axis=0)
+    """) == []
+
+
+# -- prng-reuse ---------------------------------------------------------------
+
+
+def test_prng_reuse_bad(tmp_path):
+    vs = _rules(tmp_path, "src/repro/core/rogue.py", """\
+        import jax
+
+        def draw(rng):
+            a = jax.random.normal(rng, (4,))
+            b = jax.random.uniform(rng, (4,))
+            return a + b
+    """)
+    assert _ids(vs) == ["prng-reuse"]
+
+
+def test_prng_reuse_loop_bad(tmp_path):
+    vs = _rules(tmp_path, "src/repro/core/rogue2.py", """\
+        import jax
+
+        def draw(rng, n):
+            out = []
+            for i in range(n):
+                out.append(jax.random.normal(rng, (4,)))
+            return out
+    """)
+    assert _ids(vs) == ["prng-reuse"]
+
+
+def test_prng_reuse_good(tmp_path):
+    assert _rules(tmp_path, "src/repro/core/fine.py", """\
+        import jax
+
+        def draw(rng):
+            ka, kb = jax.random.split(rng)
+            a = jax.random.normal(ka, (4,))
+            b = jax.random.uniform(kb, (4,))
+            return a + b
+    """) == []
+    # split-per-iteration inside the loop is the sanctioned pattern
+    assert _rules(tmp_path, "src/repro/core/fine2.py", """\
+        import jax
+
+        def draw(rng, n):
+            out = []
+            for i in range(n):
+                rng, sub = jax.random.split(rng)
+                out.append(jax.random.normal(sub, (4,)))
+            return out
+    """) == []
+    # fold_in per round is also fine
+    assert _rules(tmp_path, "src/repro/core/fine3.py", """\
+        import jax
+
+        def draw(rng, n):
+            return [jax.random.normal(jax.random.fold_in(rng, i), (4,))
+                    for i in range(n)]
+    """) == []
+
+
+# -- tracer-branch ------------------------------------------------------------
+
+
+def test_tracer_branch_bad(tmp_path):
+    vs = _rules(tmp_path, "src/repro/core/rogue.py", """\
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return jnp.log(x)
+            return x
+    """)
+    assert _ids(vs) == ["tracer-branch"]
+    # jit-by-call-site, branching on a derived device value
+    vs = _rules(tmp_path, "src/repro/core/rogue2.py", """\
+        import jax
+        import jax.numpy as jnp
+
+        def f(x):
+            y = jnp.sum(x)
+            while y > 1.0:
+                y = y * 0.5
+            return y
+
+        g = jax.jit(f)
+    """)
+    assert _ids(vs) == ["tracer-branch"]
+
+
+def test_tracer_branch_good(tmp_path):
+    # static shape inspection on a tracer is legal
+    assert _rules(tmp_path, "src/repro/core/fine.py", """\
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            if x.ndim == 2:
+                return jnp.sum(x, axis=1)
+            return x
+    """) == []
+    # static_argnums makes the branch value concrete
+    assert _rules(tmp_path, "src/repro/core/fine2.py", """\
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnums=1)
+        def f(x, n):
+            if n > 2:
+                return x * n
+            return x
+    """) == []
+    # an unjitted function may branch freely
+    assert _rules(tmp_path, "src/repro/core/fine3.py", """\
+        def f(x):
+            if x > 0:
+                return -x
+            return x
+    """) == []
+
+
+# -- suppression mechanics ----------------------------------------------------
+
+
+def test_suppression_must_name_the_rule(tmp_path):
+    vs = _rules(tmp_path, "src/repro/fleet/rogue.py", """\
+        # repro-lint: disable=host-sync
+        from repro import api
+    """)
+    assert _ids(vs) == ["fleet-layering"]  # wrong rule named: not waived
+
+
+def test_suppression_same_line(tmp_path):
+    assert _rules(tmp_path, "src/repro/fleet/fine.py",
+                  "from repro import api  # repro-lint: disable=fleet-layering\n"
+                  ) == []
+
+
+# -- CLI ----------------------------------------------------------------------
+
+
+def test_cli_exit_codes_and_annotations(tmp_path, capsys, monkeypatch):
+    bad = _write(tmp_path, "src/repro/fleet/rogue.py",
+                 "from repro import api\n")
+    monkeypatch.delenv("GITHUB_ACTIONS", raising=False)
+    assert lint_main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "[fleet-layering]" in out and "::error" not in out
+
+    monkeypatch.setenv("GITHUB_ACTIONS", "1")
+    assert lint_main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "::error file=" in out and "title=repro-lint fleet-layering" in out
+
+    good = _write(tmp_path, "src/repro/fleet/fine.py", "import numpy\n")
+    assert lint_main([str(good)]) == 0
+    assert lint_main(["--rules", "no-such-rule", str(good)]) == 2
+    assert lint_main(["--list-rules"]) == 0
+
+
+# -- the repo itself is clean (acceptance gate) -------------------------------
+
+
+def test_repo_self_scan_clean():
+    vs = lint.run_lint([SRC])
+    assert vs == [], "\n".join(str(v) for v in vs)
+
+
+def test_cli_self_scan_exits_zero():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("GITHUB_ACTIONS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint",
+         "src", "tests", "benchmarks", "examples"],
+        cwd=REPO, env=env, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "repro-lint: clean" in proc.stdout

@@ -20,6 +20,7 @@ import numpy as np
 import pytest
 
 from repro import api
+from repro.analysis import hlo_check
 from repro.configs.base import SubmodelConfig, get_reduced_config
 from repro.data.synthetic import lm_batches
 from repro.launch.mesh import host_mesh
@@ -176,9 +177,9 @@ def test_mesh_round_hlo_contains_all_gather():
     mesh = _mesh(2)
     m, params, scfg, batch = _lm_setup()
     sharded = api.fed_round(m, scfg, fused_forward="on", mesh=mesh)
-    hlo = jax.jit(sharded.round).lower(
-        params, batch, 0, jax.random.PRNGKey(1)).compile().as_text()
-    assert "all-gather" in hlo or "all_gather" in hlo
+    hlo = hlo_check.compiled_text(sharded.round, params, batch, 0,
+                                  jax.random.PRNGKey(1))
+    assert hlo_check.has_collective(hlo, "all-gather")
 
 
 # -- validation (no extra devices needed) -------------------------------------
