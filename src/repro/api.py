@@ -34,8 +34,10 @@ True
 Mode selection (``mode="auto"``): ``bernoulli`` → dense-mask mode (the
 only form that can express unstructured Algorithm-1 masks); every other
 scheme → compact window mode (the production TPU path).  ``mode="mask"``
-forces the paper-faithful dense path (per-client heterogeneous
-``capacities`` supported); ``mode="window"`` forces the compact path:
+forces the paper-faithful dense path; ``mode="window"`` forces the
+compact path.  Both accept per-client heterogeneous ``capacities`` —
+dense masks at per-client fractions, or per-client window widths run as
+capacity buckets (see :func:`fed_round`):
 
 >>> bern = SubmodelConfig(scheme="bernoulli", capacity=0.5,
 ...                       clients_per_round=4)
@@ -55,9 +57,9 @@ from typing import Any, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import SubmodelConfig
-from repro.core.fedavg import (MESH_AGGS, MaskFedAvg, WindowFedAvg,
-                               _build_mask_fed, _build_window_fed,
-                               output_model, run_rounds)
+from repro.core.fedavg import (MESH_AGGS, CapacityBucket, MaskFedAvg,
+                               WindowFedAvg, _build_mask_fed,
+                               _build_window_fed, output_model, run_rounds)
 from repro.sharding.spmd import axis_size, resolve_client_axis
 from repro.core.server_opt import SERVER_OPTS, ServerOpt
 from repro.core.trainer import Trainer, checkpoint_callback
@@ -73,7 +75,7 @@ __all__ = [
     "run_rounds", "resolve_mode", "MODES",
     "ClientOpt", "CLIENT_OPTS", "client_sgd", "client_momentum",
     "client_proximal", "ServerOpt", "SERVER_OPTS",
-    "WindowFedAvg", "MaskFedAvg",
+    "WindowFedAvg", "MaskFedAvg", "CapacityBucket",
     "AsyncTrainer", "FleetSimulator", "LatencyModel",
     "EpochPermutationSampler", "STALENESS_POLICIES", "SERVER_LR_SCHEDULES",
 ]
@@ -179,8 +181,18 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
         reduces shard-local f32 scatter-add partials over the client axis
         — O(model) comm instead of O(C·sub), equal to the single-device
         round only to fp roundoff.
-      capacities: mask mode only — per-client ``[C]`` fractions; defaults
-        to ``scfg.capacity`` for every client.
+      capacities: per-client ``[C]`` capacity fractions (heterogeneous
+        fleets: phones next to workstations).  Mask mode draws each
+        client's dense mask at its own fraction (defaults to
+        ``scfg.capacity`` for every client).  Window mode derives each
+        client's window *width* from its fraction and buckets clients by
+        width (``CapacityBucket``): every bucket runs the ordinary
+        homogeneous fused/extract client phase at its own static width,
+        and the bucket delta sums accumulate in descending-beta order —
+        so the heterogeneous round composes **bitwise** from per-bucket
+        homogeneous rounds (pinned in ``tests/test_hetero.py``).
+        Window-mode capacities require ``mesh=None`` and are incompatible
+        with ``shared_window=True``; values must lie in ``(0, 1]``.
       fused_forward: window mode only — ``"auto"`` (default) routes the
         client phase through the fused multi-axis window forward (no
         extract/scatter, no W_sub copy; the model reads only the active
@@ -226,6 +238,17 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
     ...                             jax.random.PRNGKey(0))
     >>> params["w"].shape, metrics["client_loss"].shape
     ((8,), (1, 2))
+
+    A heterogeneous-capacity *window* round buckets clients by width —
+    each bucket is a homogeneous round at its own beta:
+
+    >>> scfg = SubmodelConfig(scheme="rolling", capacity=0.5,
+    ...                       local_steps=1, clients_per_round=4)
+    >>> fed = api.fed_round((loss, abstract, {"w": ("d_ff",)}), scfg,
+    ...                     mode="window",
+    ...                     capacities=[1.0, 0.5, 0.5, 0.25])
+    >>> [(b.beta, list(b.idx)) for b in fed.hetero]
+    [(1.0, [0]), (0.5, [1, 2]), (0.25, [3])]
     """
     loss_fn, abstract, axes_tree = _model_parts(model)
     resolved = resolve_mode(mode, scfg.scheme)
@@ -246,9 +269,6 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
                 f"divisible by the {spmd_axis!r} mesh-axis size {n_shards} "
                 f"(each shard runs an equal slice of the client vmap)")
     if resolved == "window":
-        if capacities is not None:
-            raise ValueError("per-client capacities are a dense-mask-mode "
-                             "feature; window mode uses scfg.capacity")
         return _build_window_fed(loss_fn, scfg, abstract, axes_tree,
                                  spmd_axis=spmd_axis,
                                  mesh=mesh, mesh_agg=mesh_agg,
@@ -256,7 +276,8 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
                                  client_opt=client_opt,
                                  server_opt=server_opt,
                                  windowed_loss_fn=_windowed_loss(loss_fn),
-                                 fused_forward=fused_forward)
+                                 fused_forward=fused_forward,
+                                 capacities=capacities)
     if spmd_axis is not None:
         raise ValueError("spmd_axis applies to window mode only")
     if fused_forward in (True, "on"):

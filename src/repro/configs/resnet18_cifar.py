@@ -24,6 +24,12 @@ class ResNetConfig:
 
 CONFIG = ResNetConfig()
 
+# HeteroFL-style capacity mix for this config (the betas named above).
+# Consumed as the default capacity distribution of the paper-protocol
+# harness: ``PaperExperiment.capacities`` and the
+# ``repro.launch.experiment`` capacity-mix sweep both default to it.
+CAPACITY_BETAS = (1.0, 0.5, 0.25, 0.125, 0.0625)
+
 
 def reduced():
     # ResNet-8-ish: 1 block/stage, width 8, 16x16 inputs — CPU-friendly.

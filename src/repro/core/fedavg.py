@@ -30,11 +30,12 @@ then client.
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _replace
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SubmodelConfig
@@ -77,6 +78,26 @@ def resolve_shared_window(scfg: SubmodelConfig) -> bool:
 # ---------------------------------------------------------------------------
 
 
+@dataclass(frozen=True)
+class CapacityBucket:
+    """One width class of a heterogeneous-capacity round.
+
+    Clients whose capacity fraction beta rounds to the same window plan
+    share a bucket: ``idx`` are their lanes in the round's client axis
+    (batch dim 1), and ``fed`` is a homogeneous :class:`WindowFedAvg`
+    clone at ``scfg.capacity = beta`` with ``clients_per_round =
+    len(idx)``.  The batched-offset kernels take ONE static window width
+    per call, so the bucket loop — not a per-row width — is how
+    heterogeneous widths ride the existing fused/extract client phases,
+    and each bucket's computation is bitwise-identical to an
+    independently built homogeneous round at that beta (pinned in
+    ``tests/test_hetero.py``)."""
+
+    beta: float
+    idx: Any            # tuple of C_b client lanes, ascending
+    fed: Any            # homogeneous WindowFedAvg at this beta
+
+
 @dataclass
 class WindowFedAvg:
     loss_fn: Callable                   # loss_fn(params, batch) -> (loss, aux)
@@ -113,12 +134,78 @@ class WindowFedAvg:
     # offset rolling-matmul arm (kernels.rolling_matmul_batched).
     windowed_loss_fn: Optional[Callable] = None
     fused_forward: Any = "auto"         # "auto" | True/"on" | False/"off"
+    # Heterogeneous per-client capacities: a [clients_per_round] vector of
+    # window fractions beta_c in (0, 1].  None (the default) keeps the
+    # homogeneous round (every client at scfg.capacity).  When set, the
+    # round buckets clients by beta (see CapacityBucket) and runs one
+    # fused/extract client phase per bucket, accumulating the f32
+    # scatter-add delta sum in bucket order before the single /C mean —
+    # so a heterogeneous round composes bitwise from per-bucket
+    # homogeneous rounds.
+    capacities: Any = None
 
     def __post_init__(self):
+        self.hetero = None
+        if self.capacities is not None:
+            self._resolve_hetero()
         if self.shared_window is None:
             self.shared_window = resolve_shared_window(self.scfg)
         self.client_opt = resolve_client_opt(self.client_opt)
         self.use_fused = self._resolve_fused()
+
+    def _resolve_hetero(self):
+        """Validate ``capacities`` and build the width buckets (once, at
+        construction — window sizes are static SPMD shapes)."""
+        c = self.scfg
+        caps = np.asarray(self.capacities, np.float64).reshape(-1)
+        if caps.shape[0] != c.clients_per_round:
+            raise ValueError(
+                f"capacities must have length clients_per_round="
+                f"{c.clients_per_round}; got {caps.shape[0]}")
+        if np.any(caps <= 0.0) or np.any(caps > 1.0):
+            raise ValueError(
+                "window-mode capacities are per-client window fractions "
+                f"in (0, 1]; got {np.asarray(self.capacities)}")
+        if self.mesh is not None:
+            raise ValueError(
+                "capacities= (heterogeneous windows) and mesh= are "
+                "mutually exclusive: bucket batch slices break the static "
+                "per-shard client count; drive heterogeneous fleets "
+                "through AsyncTrainer/FleetSimulator instead")
+        if c.scheme == "full":
+            raise ValueError(
+                "capacities have no effect under scheme='full' (every "
+                "client trains the full model); drop capacities= or pick "
+                "a windowed scheme")
+        # construction-time host numpy, not a device sync
+        # repro-lint: disable=host-sync
+        self.capacities = tuple(float(b) for b in caps)
+        if np.all(caps == c.capacity):
+            return  # uniform at the configured beta: plain homogeneous round
+        if self.shared_window or c.shared_window:
+            raise ValueError(
+                "shared_window=True is incompatible with heterogeneous "
+                "capacities (clients train different window *sizes*, so "
+                "no single window is shared); leave shared_window unset")
+        self.shared_window = False  # per-client scatter aggregation only
+        dims = collect_axis_dims(self.abstract, self.axes_tree)
+        buckets = []
+        for beta in sorted(set(self.capacities), reverse=True):
+            idx = tuple(int(i) for i in np.nonzero(caps == beta)[0])
+            # repro-lint: disable=host-sync
+            bscfg = _replace(c, capacity=float(beta),
+                             clients_per_round=len(idx),
+                             shared_window=False)
+            # beta = 1.0 buckets window nothing — fused_forward="on" would
+            # (rightly) refuse, so they resolve with "auto" instead.
+            bfed = _replace(
+                self, scfg=bscfg, scheme=make_scheme(bscfg, dims),
+                shared_window=False, capacities=None,
+                fused_forward=(self.fused_forward if beta < 1.0 else "auto"))
+            # repro-lint: disable=host-sync
+            buckets.append(CapacityBucket(beta=float(beta), idx=idx,
+                                          fed=bfed))
+        self.hetero = buckets
 
     def _resolve_fused(self) -> bool:
         want = self.fused_forward
@@ -193,9 +280,132 @@ class WindowFedAvg:
 
     def _client_offsets(self, params, round_idx, rng):
         C = self.scfg.clients_per_round
+        if self.hetero is not None:
+            return self._hetero_offsets(params, round_idx, rng)
         if self.scfg.scheme == "importance":
             return self.scheme.importance_offsets(params, self.axes_tree, C)
         return self.scheme.offsets(rng, round_idx, C)
+
+    # -- heterogeneous capacities: the bucket loop ----------------------------
+
+    def _hetero_offsets(self, params, round_idx, rng):
+        """Union per-axis offset vectors [C] across the width buckets.
+
+        Each client lane carries its OWN bucket's offset draw (window
+        *sizes* differ per bucket and stay static on the bucket feds);
+        lanes of buckets that don't window an axis (beta = 1.0) stay 0.
+        Offset draws are seed-keyed (``WindowScheme.offsets`` ignores the
+        passed rng), so a bucket's slice of this union equals the draw an
+        independently built homogeneous round at that beta would make."""
+        C = self.scfg.clients_per_round
+        out = {}
+        for b in self.hetero:
+            boff = b.fed._client_offsets(params, round_idx, rng)
+            lanes = jnp.asarray(b.idx, jnp.int32)
+            for k, v in boff.items():
+                base = out.get(k, jnp.zeros((C,), jnp.int32))
+                out[k] = base.at[lanes].set(v.astype(jnp.int32))
+        return out
+
+    def _hetero_delta_sum(self, params, batch, round_idx, rng):
+        """Bucket-ordered f32 scatter-add sum of ALL client deltas (no
+        /C), plus the [K, C] losses reassembled in client order.
+
+        Each bucket slices its clients' batch lanes, runs its OWN
+        homogeneous fused/extract client phase, and contributes its
+        :meth:`_local_delta_sum` — so the total is a sum of per-bucket
+        homogeneous-round delta sums, accumulated in descending-beta
+        bucket order (the composition pinned bitwise in
+        ``tests/test_hetero.py``)."""
+        acc = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
+        parts, order = [], []
+        for b in self.hetero:
+            lanes = jnp.asarray(b.idx, jnp.int32)
+            bb = jax.tree_util.tree_map(
+                lambda x: jnp.take(jnp.asarray(x), lanes, axis=1), batch)
+            boff = b.fed._client_offsets(params, round_idx, rng)
+            bfused = b.fed.use_fused and bool(boff)
+            phase = (b.fed._client_phase_fused if bfused
+                     else b.fed._client_phase)
+            _, delta, bl = phase(params, bb, boff)
+            part = b.fed._local_delta_sum(delta, boff, bfused)
+            acc = jax.tree_util.tree_map(lambda a, d: a + d, acc, part)
+            parts.append(bl)
+            # b.idx is a static tuple of python ints, host-only
+            # repro-lint: disable=host-sync
+            order.append(np.asarray(b.idx))
+        inv = jnp.asarray(np.argsort(np.concatenate(order)), jnp.int32)
+        losses = jnp.concatenate(parts, axis=1)[:, inv]
+        return acc, losses
+
+    def _round_hetero(self, params, batch, round_idx, rng):
+        """One heterogeneous-capacity round: bucket loop, then the same
+        final update formula as the per-client scatter arm —
+        ``w + server_lr · (Σ_c scattered delta_c) / C``."""
+        c = self.scfg
+        acc, losses = self._hetero_delta_sum(params, batch, round_idx, rng)
+        new = jax.tree_util.tree_map(
+            lambda w, d: (w + c.server_lr * d / c.clients_per_round
+                          ).astype(w.dtype), params, acc)
+        new = sm.project_l2(new, c.proj_radius)
+        return new, {"loss": losses.mean(), "client_loss": losses}
+
+    def _hetero_phase_for(self, slots):
+        """Client phase over an arbitrary lane subset of a heterogeneous
+        cohort (the ``AsyncTrainer`` dispatch path).
+
+        ``slots`` is a static tuple of client lanes; the returned
+        ``phase(params, batch, offsets)`` takes batch leaves
+        ``[K, m, ...]`` and cohort-sliced union offsets ``{axis: [m]}``
+        (both in slot order) and returns FULL-shaped per-client f32
+        deltas ``[m, ...]`` — exact zeros outside each client's window,
+        extract buckets scattered per client — plus losses ``[K, m]``,
+        reassembled in slot order.  Full-shaped deltas make buffered
+        aggregation width-agnostic: they ride the ``*_fused`` arms'
+        scan-of-adds regardless of which buckets reported."""
+        slots = tuple(int(s) for s in slots)
+        pos = {s: j for j, s in enumerate(slots)}
+        plan = []
+        for b in self.hetero:
+            # static slot bookkeeping over python ints, host-only
+            # repro-lint: disable=host-sync
+            cols = np.asarray([pos[int(l)] for l in b.idx if int(l) in pos],
+                              np.int32)
+            if cols.size:
+                plan.append((b, cols))
+
+        def phase(params, batch, offsets):
+            dparts, lparts, order = [], [], []
+            for b, cols in plan:
+                colsj = jnp.asarray(cols, jnp.int32)
+                bb = jax.tree_util.tree_map(
+                    lambda x: jnp.take(x, colsj, axis=1), batch)
+                boff = {k: jnp.take(offsets[k], colsj, axis=0)
+                        for k in b.fed.scheme.sizes}
+                bfused = b.fed.use_fused and bool(boff)
+                if bfused:
+                    _, dfull, bl = b.fed._client_phase_fused(params, bb,
+                                                             boff)
+                else:
+                    _, dsub, bl = b.fed._client_phase(params, bb, boff)
+                    if boff:
+                        dfull = jax.vmap(
+                            lambda d, off: ex.scatter_delta(
+                                d, self.abstract, self.axes_tree, off,
+                                b.fed.scheme.sizes))(dsub, boff)
+                    else:  # beta = 1.0: deltas are already full-shaped
+                        dfull = dsub
+                dparts.append(dfull)
+                lparts.append(bl)
+                order.append(cols)
+            inv = jnp.asarray(np.argsort(np.concatenate(order)), jnp.int32)
+            delta = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=0)[inv], *dparts)
+            losses = jnp.concatenate(lparts, axis=1)[:, inv]
+            return delta, losses
+
+        return phase
 
     def _extract_clients(self, params, offsets, count=None):
         """Per-client compact sub-models, stacked on a leading C axis.
@@ -532,6 +742,8 @@ class WindowFedAvg:
 
     def round(self, params, batch, round_idx, rng=None):
         """One communication round.  batch leaves: [K, C, ...]."""
+        if self.hetero is not None:
+            return self._round_hetero(params, batch, round_idx, rng)
         offsets = self._client_offsets(params, round_idx, rng)
         if self.mesh is not None:
             return self._round_mesh(params, batch, offsets)
@@ -560,6 +772,15 @@ class WindowFedAvg:
             raise ValueError(
                 "no server optimizer attached; pass server_opt= or build "
                 "the round with api.fed_round(..., server_opt=...)")
+        if self.hetero is not None:
+            acc, losses = self._hetero_delta_sum(params, batch, round_idx,
+                                                 rng)
+            full_delta = jax.tree_util.tree_map(
+                lambda d: d / self.scfg.clients_per_round, acc)
+            new, opt_state = server_opt.update(params, full_delta, opt_state)
+            new = sm.project_l2(new, self.scfg.proj_radius)
+            return new, opt_state, {"loss": losses.mean(),
+                                    "client_loss": losses}
         offsets = self._client_offsets(params, round_idx, rng)
         if self.mesh is not None:
             full_delta, losses = self._mean_delta_full_mesh(params, batch,
@@ -760,7 +981,8 @@ def _build_window_fed(model_loss_fn, scfg: SubmodelConfig, abstract,
                       mesh_agg="gather", kernel_backend=None,
                       client_opt=None, server_opt=None,
                       windowed_loss_fn=None,
-                      fused_forward="auto") -> WindowFedAvg:
+                      fused_forward="auto",
+                      capacities=None) -> WindowFedAvg:
     dims = collect_axis_dims(abstract, axes_tree)
     scheme = make_scheme(scfg, dims)
     return WindowFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
@@ -769,7 +991,8 @@ def _build_window_fed(model_loss_fn, scfg: SubmodelConfig, abstract,
                         kernel_backend=kernel_backend,
                         client_opt=client_opt, server_opt=server_opt,
                         windowed_loss_fn=windowed_loss_fn,
-                        fused_forward=fused_forward)
+                        fused_forward=fused_forward,
+                        capacities=capacities)
 
 
 def _build_mask_fed(model_loss_fn, scfg: SubmodelConfig, abstract, axes_tree,

@@ -64,6 +64,19 @@ def _align_down(x, a):
     return (x // a) * a
 
 
+def capacity_size(capacity: float, n: int, align: int) -> int:
+    """Window length for one axis of full size ``n`` at fraction
+    ``capacity``, aligned down to ``align`` (but never below one aligned
+    block, never above ``n``).  This is THE size formula: ``make_scheme``
+    uses it for the homogeneous plan and the heterogeneous-capacity bucket
+    resolution (``WindowFedAvg`` with ``capacities=``) uses it to derive
+    each client's ``win[c]`` — keeping the two in lockstep is what makes a
+    capacity bucket bitwise-equal to a homogeneous round at that beta."""
+    a = min(align, n)
+    w = max(a, _align_down(int(round(capacity * n)), a))
+    return min(w, n)
+
+
 @dataclass
 class WindowScheme:
     """Resolved window plan for one (model, SubmodelConfig) pair."""
@@ -203,8 +216,7 @@ def make_scheme(submodel_cfg: SubmodelConfig, axis_dims) -> WindowScheme:
             src, group = derived[key]
             continue  # size derived below
         a = min(c.align, n)
-        w = max(a, _align_down(int(round(c.capacity * n)), a))
-        w = min(w, n)
+        w = capacity_size(c.capacity, n, c.align)
         sizes[key] = w
         R = max(1, math.ceil(n / w))
         if R == 1:

@@ -18,7 +18,8 @@ import numpy as np
 
 from repro import api
 from repro.configs.base import SubmodelConfig
-from repro.configs.resnet18_cifar import ResNetConfig, reduced as resnet_reduced
+from repro.configs.resnet18_cifar import (CAPACITY_BETAS, ResNetConfig,
+                                          reduced as resnet_reduced)
 from repro.core.fedavg import MaskFedAvg
 from repro.core.stability import generalization_gap
 from repro.data.federated import FederatedDataset
@@ -38,10 +39,11 @@ SCHEME_MAP = {  # paper name -> (scfg scheme, uses scaler)
 class PaperExperiment:
     n_clients: int = 20
     participate: int = 4
-    partition: str = "label"        # label-limited (paper) | dirichlet
+    partition: str = "label"        # iid | label-limited (paper) | dirichlet
     labels_per_client: int = 2      # 2 = high heterogeneity, 5 = low
     alpha: float = 0.5              # dirichlet only: 0.1 ~ L=2, 0.5 ~ L=5
-    capacities: tuple = (1.0, 0.5, 0.25, 0.125, 0.0625)
+    # default capacity mix = the ResNet config's HeteroFL betas
+    capacities: tuple = CAPACITY_BETAS
     k_steps: int = 2
     mb: int = 8
     lr: float = 0.05

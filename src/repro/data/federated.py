@@ -1,5 +1,7 @@
-"""Non-IID federated data partitioning (paper §5.1 protocol).
+"""Federated data partitioning (paper §5.1 protocol).
 
+* ``iid_partition`` — uniform random split (the homogeneous baseline the
+  non-IID protocols are compared against).
 * ``label_limited_partition`` — each client sees only L of the label set
   (the paper's high/low heterogeneity: CIFAR-10 L=2 vs L=5, equivalent to
   Dirichlet alpha 0.1 / 0.5).
@@ -13,6 +15,14 @@
 from __future__ import annotations
 
 import numpy as np
+
+
+def iid_partition(labels, n_clients, seed=0):
+    """Uniform random split: every client draws from the same mixture."""
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(labels))
+    return [np.sort(p).astype(np.int64)
+            for p in np.array_split(idx, n_clients)]
 
 
 def label_limited_partition(labels, n_clients, labels_per_client, seed=0):
@@ -50,7 +60,7 @@ def dirichlet_partition(labels, n_clients, alpha, seed=0):
             parts[ci].append(parts[donor].pop())
     return [np.array(p, np.int64) for p in parts]
 
-PARTITIONS = ("label", "dirichlet")
+PARTITIONS = ("iid", "label", "dirichlet")
 
 
 class FederatedDataset:
@@ -71,12 +81,15 @@ class FederatedDataset:
         ``partition="label"`` is the paper's label-limited protocol
         (``labels_per_client`` classes per client); ``"dirichlet"`` is
         the Dirichlet(``alpha``) alternative — smaller ``alpha`` means
-        more label skew.  Same ``seed`` drives split and round sampling.
+        more label skew; ``"iid"`` is the uniform-split baseline.  Same
+        ``seed`` drives split and round sampling.
         """
         if partition not in PARTITIONS:
             raise ValueError(f"unknown partition {partition!r}; expected "
                              f"one of {PARTITIONS}")
-        if partition == "label":
+        if partition == "iid":
+            parts = iid_partition(labels, n_clients, seed=seed)
+        elif partition == "label":
             parts = label_limited_partition(labels, n_clients,
                                             labels_per_client, seed=seed)
         else:

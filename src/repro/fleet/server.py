@@ -86,6 +86,15 @@ class AsyncTrainer:
     log/eval boundaries) plus async extras per record: ``virtual_time``
     (the virtual clock at aggregation), ``staleness`` (mean τ of the
     aggregated reports), and ``lr_mult`` (the server-lr schedule value).
+
+    Heterogeneous-capacity rounds (``fed_round(capacities=)``) dispatch
+    through the bucket-loop phase and buffer FULL-shaped per-client
+    deltas; aggregation then sums reports in arrival (client) order
+    rather than the sync round's bucket order, so their M=N anchor holds
+    to f32 roundoff (allclose), not bitwise — the homogeneous bitwise
+    anchor is unchanged.  With ``FleetSimulator(capacities=)`` also set,
+    dispatch rank-matches device capacity to window width
+    (:meth:`_pair_capacities`).
     """
 
     fed: Any                               # window-mode round (api.fed_round)
@@ -159,6 +168,11 @@ class AsyncTrainer:
         self._phase = None
         self._scatter_fed = None            # shared_window=False clone
         self._agg_cache: Dict[Any, Any] = {}
+        # Heterogeneous capacities (window mode, capacities=): dispatch
+        # cohorts run the bucket-loop phase and report FULL-shaped
+        # per-client deltas, so buffered aggregation is width-agnostic.
+        self._hetero = getattr(fed, "hetero", None)
+        self._phase_cache: Dict[Any, Any] = {}
 
     # -- round context (rng chain + offsets mirror the sync Trainer) ----------
 
@@ -180,7 +194,16 @@ class AsyncTrainer:
             self._offsets_host[tag] = jax.device_get(off)
         return self._round_offsets[tag]
 
-    def _phase_fn(self):
+    def _phase_fn(self, slots):
+        if self._hetero is not None:
+            # bucket membership depends on WHICH lanes dispatched: one
+            # jitted phase per distinct slot set (slot pools are small
+            # and recur, so the cache stays tiny)
+            key = tuple(slots)
+            if key not in self._phase_cache:
+                f = self.fed._hetero_phase_for(key)
+                self._phase_cache[key] = jax.jit(f) if self.jit else f
+            return self._phase_cache[key]
         if self._phase is None:
             fed = self.fed
 
@@ -212,20 +235,43 @@ class AsyncTrainer:
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
         return batch
 
+    def _pair_capacities(self, ids, slots):
+        """Rank-match sampled clients to width slots: when both the fleet
+        (device capability, ``FleetSimulator(capacities=)``) and the
+        round (per-slot window width, ``fed_round(capacities=)``) carry
+        capacity vectors, the most capable sampled client takes the
+        widest dispatched slot — slow/small devices train small windows.
+        Pure host-side reindexing of the sampled ids; with either vector
+        absent, ids pass through unchanged."""
+        fleet_caps = getattr(self.fleet, "capacities", None)
+        slot_caps = getattr(self.fed, "capacities", None)
+        if fleet_caps is None or slot_caps is None:
+            return ids
+        ids = np.asarray(ids)
+        slot_rank = np.argsort(
+            -np.asarray([slot_caps[s] for s in slots]), kind="stable")
+        id_rank = np.argsort(-fleet_caps[ids], kind="stable")
+        paired = np.empty_like(ids)
+        paired[slot_rank] = ids[id_rank]
+        return paired
+
     def _dispatch(self, source):
         slots, self._idle = sorted(self._idle), []
-        ids = self.sampler.sample(len(slots))
+        ids = self._pair_capacities(self.sampler.sample(len(slots)), slots)
         tag = self.round_idx
         offsets = self._offsets_for(tag)
         if self._fused is None:
-            self._fused = self.fed.use_fused and bool(offsets)
+            # heterogeneous cohorts report FULL-shaped per-client deltas
+            # (exact zeros outside each window) → the *_fused agg arms
+            self._fused = (True if self._hetero is not None
+                           else self.fed.use_fused and bool(offsets))
         lanes = jnp.asarray(slots, jnp.int32)
         cohort_off = {k: jnp.take(v, lanes, axis=0)
                       for k, v in offsets.items()}
         host_off = self._offsets_host[tag]
         batch = self._next_batch(source, ids, slots)
         delta, losses = self.fleet.run_cohort(
-            self._phase_fn(), self.params, batch, cohort_off)
+            self._phase_fn(slots), self.params, batch, cohort_off)
         for j, (slot, cid) in enumerate(zip(slots, ids)):
             delay, ok = self.fleet.completion(int(cid), self._seq)
             rep = ClientReport(

@@ -53,9 +53,18 @@ class FleetSimulator:
     entries of a seed-keyed permutation — fixed for the fleet's
     lifetime, so sweeping ``straggler_frac`` upward only *adds*
     stragglers (the bench's monotonicity is meaningful).
+
+    ``capacities`` (optional, ``[n_clients]`` fractions in (0, 1])
+    models heterogeneous device capability: when the round object also
+    carries window-mode ``capacities`` (width slots), the
+    ``AsyncTrainer`` dispatcher pairs each sampled client with a slot of
+    matching capacity rank — slow/small devices train small windows.
+    The simulator itself only stores the vector; pairing lives in the
+    server (the simulator never touches the numerics).
     """
 
-    def __init__(self, n_clients: int, latency: LatencyModel = LatencyModel()):
+    def __init__(self, n_clients: int, latency: LatencyModel = LatencyModel(),
+                 capacities=None):
         if n_clients < 1:
             raise ValueError(f"n_clients must be >= 1; got {n_clients}")
         self.n_clients = n_clients
@@ -63,6 +72,18 @@ class FleetSimulator:
         order = np.random.default_rng(latency.seed).permutation(n_clients)
         k = int(round(latency.straggler_frac * n_clients))
         self.stragglers = frozenset(int(c) for c in order[:k])
+        if capacities is None:
+            self.capacities = None
+        else:
+            caps = np.asarray(capacities, np.float64).reshape(-1)
+            if caps.shape[0] != n_clients:
+                raise ValueError(
+                    f"capacities must have length n_clients={n_clients}; "
+                    f"got {caps.shape[0]}")
+            if np.any(caps <= 0.0) or np.any(caps > 1.0):
+                raise ValueError("fleet capacities are per-client fractions "
+                                 f"in (0, 1]; got {caps}")
+            self.capacities = caps
 
     # -- per-dispatch draws ----------------------------------------------------
 

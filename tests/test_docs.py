@@ -96,10 +96,12 @@ def test_matrix_covers_every_supported_axis():
 def test_docs_tree_exists_and_links_resolve():
     """docs/ pages exist and their relative links point at real files
     (the same invariant the CI policy job greps, testable offline)."""
-    for page in ("architecture.md", "paper_map.md", "benchmarks.md"):
+    for page in ("architecture.md", "paper_map.md", "benchmarks.md",
+                 "experiments.md"):
         assert os.path.exists(os.path.join(ROOT, "docs", page)), page
     for f in ("README.md", "ROADMAP.md", "docs/architecture.md",
-              "docs/paper_map.md", "docs/benchmarks.md"):
+              "docs/paper_map.md", "docs/benchmarks.md",
+              "docs/experiments.md"):
         base = os.path.dirname(os.path.join(ROOT, f))
         for link in re.findall(r"\]\(([^)#]+)\)", _read(f)):
             if link.startswith("http"):
@@ -119,6 +121,55 @@ def test_architecture_doc_covers_every_package():
     assert pkgs, "src/repro packages not found"
     for pkg in pkgs:
         assert pkg in doc, f"docs/architecture.md does not mention {pkg}"
+
+
+def test_architecture_doc_covers_experiment_runner():
+    """The paper-protocol harness is part of the documented surface: the
+    architecture page names the runner module and the results book."""
+    doc = _read("docs", "architecture.md")
+    assert "launch/experiment.py" in doc
+    assert "experiments.md" in doc
+
+
+def test_experiments_doc_metric_names_match_runner():
+    """docs/experiments.md's metrics section documents EXACTLY the record
+    keys a default ``repro.launch.experiment`` run emits — the results
+    book cannot drift from the runner (and vice versa)."""
+    from repro.launch.experiment import metric_names
+    doc = _read("docs", "experiments.md")
+    m = re.search(r"<!-- metrics:begin -->(.*?)<!-- metrics:end -->",
+                  doc, re.S)
+    assert m, "docs/experiments.md lost the metrics:begin/end markers"
+    documented = set(re.findall(r"`([a-z0-9_{}]+)`", m.group(1)))
+    schemes, parts = ("shuffled", "random", "static"), ("iid", "dirichlet")
+
+    def template(name):
+        # swept families are documented once as {scheme}/{partition}
+        # templates, not per concrete sweep cell; cross-scheme records
+        # (shuffled_beats_random) stay literal
+        if any(name.startswith(s + "_") for s in schemes) and \
+                not any(name.endswith("_" + s) for s in schemes):
+            for s in schemes:
+                if name.startswith(s + "_"):
+                    name = "{scheme}" + name[len(s):]
+                    break
+            for p in parts:
+                name = name.replace(f"_{p}_", "_{partition}_")
+        return name
+
+    expected = {template(n) for n in metric_names()}
+    missing = expected - documented
+    stale = documented - expected
+    assert not missing, f"docs/experiments.md missing metrics: {missing}"
+    assert not stale, f"docs/experiments.md documents unknown: {stale}"
+
+
+def test_experiments_doc_documents_cli_defaults():
+    """The run instructions quote the real module path and the real
+    output file."""
+    doc = _read("docs", "experiments.md")
+    assert "python -m repro.launch.experiment" in doc
+    assert "experiments/bench_results.json" in doc
 
 
 def test_paper_map_pointers_resolve():

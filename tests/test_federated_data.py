@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.data.federated import (FederatedDataset, dirichlet_partition,
-                                  label_limited_partition)
+                                  iid_partition, label_limited_partition)
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -74,8 +74,13 @@ def test_from_labels_dispatch():
     ref2 = label_limited_partition(y, 8, 2, seed=4)
     for pa, pb in zip(fd2.parts, ref2):
         np.testing.assert_array_equal(pa, pb)
+    fd3 = FederatedDataset.from_labels(data, y, 8, partition="iid", seed=4)
+    ref3 = iid_partition(y, 8, seed=4)
+    for pa, pb in zip(fd3.parts, ref3):
+        np.testing.assert_array_equal(pa, pb)
+    assert sorted(np.concatenate(fd3.parts).tolist()) == list(range(len(y)))
     with pytest.raises(ValueError, match="partition"):
-        FederatedDataset.from_labels(data, y, 8, partition="iid")
+        FederatedDataset.from_labels(data, y, 8, partition="nope")
 
 
 def _dataset(n_clients=8, seed=7, n=400):
