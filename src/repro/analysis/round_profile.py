@@ -1,0 +1,156 @@
+"""Per-phase FLOP/byte/roofline profile: fused vs extract fed round.
+
+The wall-clock gap between the fused and extract client phases is a memory
+story, not a FLOP story — both arms do the same matmuls, but they move very
+different byte volumes (extract stacks per-client W_sub copies; fused reads
+windows in place; the aggregations differ in whether they reduce O(C·full)
+or O(C·sub) elements).  This module compiles each ROUND PHASE separately —
+client phase, delta aggregation, and the whole round — runs the trip-count-
+aware HLO cost analyzer (``repro.analysis.hlo_cost``) over the optimized
+text, and renders three-term rooflines (``repro.analysis.roofline``) so the
+gap is attributable to a phase and a bottleneck term before anyone touches
+a kernel.
+
+    PYTHONPATH=src python -m repro.analysis.round_profile \
+        [--arch tinyllama_1_1b] [--out experiments/bench_results.json]
+
+Results merge into ``experiments/bench_results.json`` under the
+``round_profile`` entry (the same file ``benchmarks/run.py`` maintains, and
+``benchmarks.run --only round_profile`` drives the identical code path).
+Nothing executes on device — phases are compiled, never run.
+
+Keep module import jax-free (``lazy-jax-import`` lint rule): jax and the
+model zoo are deferred into :func:`profile`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+ARMS = ("fused", "extract")
+PHASES = ("client", "aggregate", "round")
+
+#: Metrics emitted per (arm, phase) — pinned so the bench schema test can
+#: enumerate the full round_profile entry without importing jax.
+PHASE_METRICS = ("flops", "bytes", "intensity", "t_compute_us",
+                 "t_memory_us", "bottleneck", "step_lb_us")
+
+
+def _phase_rows(hlo_text, chips, mflops):
+    from repro.analysis import hlo_cost, roofline
+
+    costs = hlo_cost.analyze(hlo_text)
+    rl = roofline.Roofline(costs["flops"], costs["bytes"],
+                           costs["coll_bytes"], chips, mflops)
+    return {
+        "flops": int(costs["flops"]),
+        "bytes": int(costs["bytes"]),
+        "intensity": round(costs["flops"] / max(costs["bytes"], 1), 3),
+        "t_compute_us": round(rl.t_compute * 1e6, 3),
+        "t_memory_us": round(rl.t_memory * 1e6, 3),
+        "bottleneck": rl.bottleneck,
+        "step_lb_us": round(rl.step_time_lower_bound * 1e6, 3),
+    }
+
+
+def profile(arch="tinyllama_1_1b", chips=1, seq=64):
+    """Compile the fused and extract round phases of the bench transformer
+    (same reduced config as ``benchmarks.run fed_round_fused``) and return
+    a flat ``{"{arm}_{phase}_{metric}": value}`` dict."""
+    from dataclasses import replace
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.analysis import hlo_check
+    from repro.analysis.roofline import model_flops
+    from repro.configs.base import SubmodelConfig, get_reduced_config
+    from repro.data.synthetic import lm_batches
+    from repro.models import build_model
+
+    # Same model construction as benchmarks.run fed_round_fused, including
+    # the inlined layer scan — the profile must attribute bytes for the
+    # programs the bench actually times.
+    cfg = replace(get_reduced_config(arch), n_layers=2, head_dim=16)
+    m = build_model(cfg, remat=False, layer_unroll=True)
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                          clients_per_round=4, client_lr=0.05)
+    it = lm_batches(cfg.vocab, (scfg.local_steps, scfg.clients_per_round, 2),
+                    seq)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    rng = jax.random.PRNGKey(1)
+    tokens = scfg.local_steps * scfg.clients_per_round * 2 * seq
+
+    out = {}
+    for arm in ARMS:
+        fed = api.fed_round(m, scfg,
+                            fused_forward="on" if arm == "fused" else "off")
+        mflops = model_flops(cfg, fed.abstract, tokens)
+        offsets = fed._client_offsets(params, 0, rng)
+        phase = (fed._client_phase_fused if arm == "fused"
+                 else fed._client_phase)
+
+        def client_fn(p, b, off):
+            return phase(p, b, off)[1]
+
+        agg = (fed._apply_mean_delta_fused if arm == "fused"
+               else fed._apply_mean_delta)
+
+        def agg_fn(p, d, off):
+            return agg(p, d, off)
+
+        def round_fn(p, b, r):
+            return fed.round(p, b, 0, r)[0]
+
+        # compile-only: ShapeDtypeStruct deltas keep the aggregation phase
+        # from needing a real client-phase execution
+        delta_aval = jax.eval_shape(client_fn, params, batch, offsets)
+        hlos = {
+            "client": hlo_check.compiled_text(client_fn, params, batch,
+                                              offsets),
+            "aggregate": hlo_check.compiled_text(agg_fn, params, delta_aval,
+                                                 offsets),
+            "round": hlo_check.compiled_text(round_fn, params, batch, rng),
+        }
+        for ph, hlo in hlos.items():
+            for k, v in _phase_rows(hlo, chips, mflops).items():
+                out[f"{arm}_{ph}_{k}"] = v
+
+    for ph in PHASES:
+        fb, eb = out[f"fused_{ph}_bytes"], out[f"extract_{ph}_bytes"]
+        out[f"{ph}_bytes_extract_over_fused"] = round(eb / max(fb, 1), 3)
+    return out
+
+
+def merge_results(results, path):
+    """Merge a ``round_profile`` entry into the bench-results JSON (same
+    read-modify-write the benchmark harness uses)."""
+    existing = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+    existing["round_profile"] = results
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(existing, f, indent=1, sort_keys=True)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--chips", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--out", default="experiments/bench_results.json")
+    args = ap.parse_args(argv)
+    results = profile(arch=args.arch, chips=args.chips, seq=args.seq)
+    for k, v in sorted(results.items()):
+        print(f"round_profile,{k},{v}")
+    print("wrote", merge_results(results, args.out))
+
+
+if __name__ == "__main__":
+    main()

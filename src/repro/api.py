@@ -142,7 +142,8 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
               client_opt=None, server_opt=None,
               kernel_backend: Optional[str] = None, spmd_axis=None,
               mesh=None, mesh_agg: str = "gather",
-              capacities=None, fused_forward="auto"):
+              capacities=None, fused_forward="auto",
+              uplink_compression: Optional[str] = None):
     """Build one federated sub-model round (Algorithms 1 & 2).
 
     Args:
@@ -212,6 +213,12 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
         ``"off"``/False keeps the extract-based client phase.  Fused and
         extract rounds are bitwise-equal on f32 (property-tested; see the
         README fused-coverage matrix, pinned by ``tests/test_docs.py``).
+      uplink_compression: window mode only — ``None`` (default) ships the
+        exact f32 client deltas; ``"bf16"`` rounds each delta to bfloat16
+        on the simulated uplink (half the client→server bytes) and
+        decompresses to f32 before the server mean, so accumulation stays
+        f32 with one final rounding into the param dtype.  ``"bf16"``
+        trades the fused == extract bitwise guarantee for comm volume.
 
     Returns a :class:`WindowFedAvg` or :class:`MaskFedAvg` whose ``round``
     signature is identical across modes (mask mode additionally accepts
@@ -277,11 +284,15 @@ def fed_round(model, scfg: SubmodelConfig, *, mode: str = "auto",
                                  server_opt=server_opt,
                                  windowed_loss_fn=_windowed_loss(loss_fn),
                                  fused_forward=fused_forward,
-                                 capacities=capacities)
+                                 capacities=capacities,
+                                 uplink_compression=uplink_compression)
     if spmd_axis is not None:
         raise ValueError("spmd_axis applies to window mode only")
     if fused_forward in (True, "on"):
         raise ValueError("fused_forward applies to window mode only "
+                         "(mask mode is the dense-mask oracle)")
+    if uplink_compression is not None:
+        raise ValueError("uplink_compression applies to window mode only "
                          "(mask mode is the dense-mask oracle)")
     if capacities is None:
         capacities = np.full(scfg.clients_per_round, scfg.capacity,

@@ -143,9 +143,21 @@ class WindowFedAvg:
     # so a heterogeneous round composes bitwise from per-bucket
     # homogeneous rounds.
     capacities: Any = None
+    # Uplink-delta compression for the fused aggregation path: "bf16"
+    # simulates clients shipping their round delta in bfloat16 (half the
+    # uplink bytes), decompressed to f32 at the server BEFORE the client
+    # mean — f32 accumulation, one final rounding into the param dtype, per
+    # the PR 3 fill-in pipeline.  None (default) keeps the exact f32 uplink
+    # and with it the fused == extract bitwise guarantee; "bf16" trades
+    # that for comm volume (agreement to bf16 rounding of the deltas).
+    uplink_compression: Optional[str] = None
 
     def __post_init__(self):
         self.hetero = None
+        if self.uplink_compression not in (None, "bf16"):
+            raise ValueError(
+                "uplink_compression must be None (exact f32 uplink) or "
+                f"'bf16'; got {self.uplink_compression!r}")
         if self.capacities is not None:
             self._resolve_hetero()
         if self.shared_window is None:
@@ -441,8 +453,10 @@ class WindowFedAvg:
             subp = constrain_tree(subp, self.axes_tree)
             return (subp, ost), loss
 
-        (subK, _), losses = jax.lax.scan(kstep, (sub0, opt.init(sub0)),
-                                         batch)
+        # The K-step scan stays rolled: unrolling it on top of the model's
+        # inlined layer scan perturbs XLA's dot fusion enough to break the
+        # bitwise fused == extract equality (~1 ulp), for no round-level win.
+        (subK, _), losses = jax.lax.scan(kstep, (sub0, opt.init(sub0)), batch)
         # delta in f32: a bf16 subtraction would quantize small K-step
         # updates to 0 and starve the server pseudo-gradient.
         delta = jax.tree_util.tree_map(
@@ -546,13 +560,30 @@ class WindowFedAvg:
             lambda w, d: (w + c.server_lr * d.astype(jnp.float32) / C
                           ).astype(w.dtype), params, acc)
 
+    def _uplink(self, tree):
+        """Simulated client→server uplink of a delta tree (leaves may carry
+        a leading client axis): identity under the exact f32 uplink;
+        ``uplink_compression='bf16'`` rounds each delta to bfloat16 (the
+        wire format, half the bytes) and immediately decompresses to f32 so
+        every downstream accumulation stays f32 — one rounding per delta,
+        never a bf16 reduction."""
+        if self.uplink_compression is None:
+            return tree
+        f32 = jnp.float32
+        return jax.tree_util.tree_map(
+            lambda d: d.astype(jnp.bfloat16).astype(f32), tree)
+
     def _apply_mean_delta_fused(self, params, delta_full, offsets):
         """Aggregation for the fused client phase's FULL-shaped delta.
 
         Shared window: out-of-window coordinates of the fused delta are
-        exactly 0, so the client mean commutes with the window slice —
-        average first, slice the shared window once, then the same single
-        in-place scatter as the extract path.
+        exactly 0, so the window slice commutes with the per-coordinate
+        client mean — extract each client's compact window FIRST, mean the
+        [C, sub] stack, then the same single in-place scatter as the
+        extract path.  Extract-then-mean is bitwise-identical to the
+        mean-then-extract order (same elements, same reduction order) but
+        does O(C·sub) aggregation arithmetic instead of O(C·full) — the
+        shared-window wall-clock win.
 
         Per-client windows (staggered/random): each client's full-shaped
         delta already IS its scattered form (exact zeros outside its own
@@ -563,11 +594,12 @@ class WindowFedAvg:
         C = c.clients_per_round
         if self.shared_window:
             off0 = {k: v[0] for k, v in offsets.items()}
-            dbar_full = jax.tree_util.tree_map(
+            delta_sub = self._vmap(
+                lambda d: ex.extract(d, self.axes_tree, off0,
+                                     self.scheme.sizes))(delta_full)
+            dbar = jax.tree_util.tree_map(
                 lambda d: jnp.mean(d.astype(jnp.float32), axis=0),
-                delta_full)
-            dbar = ex.extract(dbar_full, self.axes_tree, off0,
-                              self.scheme.sizes)
+                self._uplink(delta_sub))
             return _scatter_update(params, dbar, self.abstract,
                                    self.axes_tree, off0, self.scheme.sizes,
                                    c.server_lr)
@@ -579,7 +611,7 @@ class WindowFedAvg:
 
         acc0 = jax.tree_util.tree_map(
             lambda x: jnp.zeros(x.shape, jnp.float32), self.abstract)
-        acc, _ = jax.lax.scan(acc_step, acc0, delta_full)
+        acc, _ = jax.lax.scan(acc_step, acc0, self._uplink(delta_full))
         return jax.tree_util.tree_map(
             lambda w, d: (w + c.server_lr * d.astype(jnp.float32) / C
                           ).astype(w.dtype), params, acc)
@@ -589,7 +621,9 @@ class WindowFedAvg:
         with exact zeros outside each client's window — the shared-window
         mean IS the scattered mean of the extract path; per-client windows
         mirror the extract path's scatter-average scan (same accumulation
-        order, bitwise)."""
+        order, bitwise).  ``uplink_compression`` rounds each client delta
+        through the simulated uplink before the f32 mean."""
+        delta_full = self._uplink(delta_full)
         if self.shared_window:
             return jax.tree_util.tree_map(
                 lambda d: jnp.mean(d.astype(jnp.float32), axis=0),
@@ -982,7 +1016,8 @@ def _build_window_fed(model_loss_fn, scfg: SubmodelConfig, abstract,
                       client_opt=None, server_opt=None,
                       windowed_loss_fn=None,
                       fused_forward="auto",
-                      capacities=None) -> WindowFedAvg:
+                      capacities=None,
+                      uplink_compression=None) -> WindowFedAvg:
     dims = collect_axis_dims(abstract, axes_tree)
     scheme = make_scheme(scfg, dims)
     return WindowFedAvg(loss_fn=model_loss_fn, scfg=scfg, abstract=abstract,
@@ -992,7 +1027,8 @@ def _build_window_fed(model_loss_fn, scfg: SubmodelConfig, abstract,
                         client_opt=client_opt, server_opt=server_opt,
                         windowed_loss_fn=windowed_loss_fn,
                         fused_forward=fused_forward,
-                        capacities=capacities)
+                        capacities=capacities,
+                        uplink_compression=uplink_compression)
 
 
 def _build_mask_fed(model_loss_fn, scfg: SubmodelConfig, abstract, axes_tree,

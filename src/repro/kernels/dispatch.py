@@ -35,12 +35,20 @@ from repro.kernels.masked_update import sgd_2d
 from repro.kernels.ops import (_from_2d, _to_2d, fillin_agg_tree,
                                masked_sgd_tree)
 from repro.kernels.rolling_matmul import rolling_matmul as _rolling_mm_pallas
+from repro.kernels.rolling_matmul import \
+    rolling_matmul_multi as _rolling_mm_multi_pallas
 from repro.kernels.rolling_matmul_batched import \
     rolling_matmul_batched as _rolling_mm_batched_pallas
 from repro.kernels.rolling_matmul_batched import \
     rolling_matmul_batched_dx as _rolling_dx_batched_pallas
+from repro.kernels.rolling_matmul_batched import \
+    rolling_matmul_batched_dx_multi as _rolling_dx_batched_multi_pallas
+from repro.kernels.rolling_matmul_batched import \
+    rolling_matmul_batched_multi as _rolling_mm_batched_multi_pallas
 from repro.kernels.rolling_matmul_bwd import \
     rolling_matmul_dx as _rolling_dx_pallas
+from repro.kernels.rolling_matmul_bwd import \
+    rolling_matmul_dx_multi as _rolling_dx_multi_pallas
 
 BACKENDS = ("pallas", "jnp", "auto")
 BACKEND_ENV = "REPRO_KERNEL_BACKEND"
@@ -64,6 +72,110 @@ def resolve_backend(backend: str | None = None) -> str:
     if backend == "auto":
         return "pallas" if (on_tpu() and compat.PLTPU_AVAILABLE) else "jnp"
     return backend
+
+
+# ---------------------------------------------------------------------------
+# Block-size autotuning (deterministic; no on-device timing)
+# ---------------------------------------------------------------------------
+
+#: Cache of autotuned (bm, bn, bk) triples, keyed per
+#: ((M, K, win), dtype-name, resolved-backend).  Deterministic — the tuner
+#: never times anything — so the cache is a memo, not a measurement store,
+#: and two processes always agree on the choice for a key.
+_AUTOTUNE_CACHE: dict = {}
+
+#: Process-wide override installed by :func:`set_block_override`
+#: (``--kernel-block`` in ``launch/train.py``).  Wins over the autotuner for
+#: every op whose block args were left at ``None``; explicit per-call block
+#: args still take precedence.  Never written into ``_AUTOTUNE_CACHE``.
+_BLOCK_OVERRIDE: tuple | None = None
+
+#: Largest candidate block edge — one 128x128 MXU tile per dimension.
+_BLOCK_CAP = 128
+
+#: VMEM working-set budget per kernel instance.  The grid double-buffers
+#: every operand block (that is what overlaps the next W-column fetch with
+#: the current dot), so the tuner charges 2x per input/output block plus the
+#: f32 accumulator scratch, and shrinks bk until the set fits.
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _choose_block(dim: int, cap: int = _BLOCK_CAP) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``cap``, preferring multiples of
+    8 (f32 sublane width) over raw size.  Divisors-only keeps every Pallas
+    grid exact — the kernels assert ``dim % block == 0`` — so the choice can
+    never change numerics, only tiling."""
+    dim = int(dim)
+    if dim <= 0:
+        return 1
+    divisors = [d for d in range(1, min(dim, cap) + 1) if dim % d == 0]
+    sublane = [d for d in divisors if d % 8 == 0]
+    return max(sublane) if sublane else max(divisors)
+
+
+def _vmem_block_bytes(bm: int, bn: int, bk: int, itemsize: int) -> int:
+    return 2 * (bm * bk + bk * bn + bm * bn) * itemsize + bm * bn * 4
+
+
+def autotune_blocks(M, K, win, dtype=jnp.float32, backend=None):
+    """Pick (bm, bn, bk) for a rolling matmul of ``x[M, K] @ W[K, off:off+
+    win]`` — deterministically, from the divisors of the operand dims.
+
+    Cached per ``((M, K, win), dtype, resolved backend)``; the backend is in
+    the key because the jnp arm ignores blocks while future TPU generations
+    may want different caps, and crossing keys would let one shape's choice
+    leak into another's.  Call :func:`clear_block_cache` to drop the memo
+    (tests), :func:`set_block_override` to bypass the tuner entirely.
+    """
+    key = ((int(M), int(K), int(win)), np.dtype(dtype).name,
+           resolve_backend(backend))
+    hit = _AUTOTUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    bm, bn, bk = _choose_block(M), _choose_block(win), _choose_block(K)
+    itemsize = np.dtype(dtype).itemsize
+    while bk > 8 and _vmem_block_bytes(bm, bn, bk,
+                                       itemsize) > _VMEM_BUDGET_BYTES:
+        bk = _choose_block(K, cap=bk // 2)
+    choice = (bm, bn, bk)
+    _AUTOTUNE_CACHE[key] = choice
+    return choice
+
+
+def set_block_override(blocks):
+    """Install a process-wide (bm, bn, bk) override, or ``None`` to clear.
+
+    The override wins over the autotuner for every dispatched rolling-matmul
+    whose block args default to ``None``; explicit per-call ``bm/bn/bk``
+    still take precedence.  It is never written into the autotune cache, so
+    clearing it restores tuned behaviour without a cache flush."""
+    global _BLOCK_OVERRIDE
+    if blocks is not None:
+        bm, bn, bk = (int(b) for b in blocks)
+        if min(bm, bn, bk) < 1:
+            raise ValueError(f"block sizes must be >= 1, got {blocks!r}")
+        blocks = (bm, bn, bk)
+    _BLOCK_OVERRIDE = blocks
+    return blocks
+
+
+def clear_block_cache():
+    """Drop all memoized autotune choices (test isolation)."""
+    _AUTOTUNE_CACHE.clear()
+
+
+def _resolve_blocks(M, K, win, dtype, backend, bm, bn, bk):
+    """Fill ``None`` block args: explicit call args > ``set_block_override``
+    > cached :func:`autotune_blocks` choice."""
+    if bm is not None and bn is not None and bk is not None:
+        return bm, bn, bk
+    if _BLOCK_OVERRIDE is not None:
+        abm, abn, abk = _BLOCK_OVERRIDE
+    else:
+        abm, abn, abk = autotune_blocks(M, K, win, dtype, backend)
+    return (abm if bm is None else bm,
+            abn if bn is None else bn,
+            abk if bk is None else bk)
 
 
 # ---------------------------------------------------------------------------
@@ -274,9 +386,13 @@ def _rolling_mm_bwd(win, backend, bm, bn, bk, assume_aligned, res, dy):
 _rolling_mm.defvjp(_rolling_mm_fwd, _rolling_mm_bwd)
 
 
-def rolling_matmul(x, w, offset, win, backend=None, bm=128, bn=128, bk=128,
-                   assume_aligned=False):
+def rolling_matmul(x, w, offset, win, backend=None, bm=None, bn=None,
+                   bk=None, assume_aligned=False):
     """y[M, win] = x[M, K] @ w[K, offset : offset+win], differentiable.
+
+    Block sizes default to ``None`` = resolved at trace time via
+    :func:`autotune_blocks` (explicit args > :func:`set_block_override` >
+    cached autotune choice).
 
     Pallas arm fuses the window into the matmul's index_map so inactive
     columns of ``w`` are never read from HBM; jnp arm is the dynamic-slice
@@ -298,6 +414,8 @@ def rolling_matmul(x, w, offset, win, backend=None, bm=128, bn=128, bk=128,
     synthesized per-element loop; the jnp oracle batches through the
     ordinary gather rules.  :func:`rolling_matmul_batched` is the same arm
     with the batch explicit in the call."""
+    bm, bn, bk = _resolve_blocks(x.shape[-2], x.shape[-1], win, x.dtype,
+                                 backend, bm, bn, bk)
     return _rolling_mm(x, w, offset, win, backend, bm, bn, bk,
                        assume_aligned)
 
@@ -388,8 +506,8 @@ def _rolling_mm_b_bwd(win, backend, bm, bn, bk, assume_aligned, res, dy):
 _rolling_mm_b.defvjp(_rolling_mm_b_fwd, _rolling_mm_b_bwd)
 
 
-def rolling_matmul_batched(x, w, offsets, win, backend=None, bm=128, bn=128,
-                           bk=128, assume_aligned=False):
+def rolling_matmul_batched(x, w, offsets, win, backend=None, bm=None,
+                           bn=None, bk=None, assume_aligned=False):
     """y[B, M, win] = x[B, M, K] @ w[B, K, offsets[B] : offsets[B]+win],
     differentiable — the batched-offset arm of :func:`rolling_matmul`.
 
@@ -401,6 +519,191 @@ def rolling_matmul_batched(x, w, offsets, win, backend=None, bm=128, bn=128,
     dynamic-slice oracle.  Falls back to the oracle for untileable shapes,
     for concrete offsets off the block grid, and for *traced* offsets
     unless ``assume_aligned=True`` (the scheme's ``grid_multiple``
-    certificate).  Custom VJP mirrors :func:`rolling_matmul` per row."""
+    certificate).  Custom VJP mirrors :func:`rolling_matmul` per row.
+    ``None`` block args resolve through :func:`autotune_blocks`."""
+    bm, bn, bk = _resolve_blocks(x.shape[-2], x.shape[-1], win, x.dtype,
+                                 backend, bm, bn, bk)
     return _rolling_mm_b(x, w, offsets, win, backend, bm, bn, bk,
                          assume_aligned)
+
+
+# -- multi-step form (T windowed matmuls sharing one x and one offset) -------
+
+
+def _pallas_multi_fwd(x, ws, offset, win, bm, bn, bk):
+    """Batchable Pallas multi-step forward: ``ws`` arrives stacked [T, K, N]
+    and the whole step group runs as one kernel call.  Under ``jax.vmap``
+    (the fused client phase) this lowers to the batched-offset multi kernel
+    — or, when weights AND offset are shared across the batch, folds the
+    batch into rows exactly like :func:`_pallas_fwd`."""
+    interp = interpret_mode()
+
+    @custom_batching.custom_vmap
+    def fwd(x, ws, offset):
+        return _rolling_mm_multi_pallas(x, ws, offset, win, bm=bm, bn=bn,
+                                        bk=bk, interpret=interp)
+
+    @fwd.def_vmap
+    def _rule(axis_size, in_batched, x, ws, offset):  # noqa: ANN001
+        xb, wb, ob = in_batched
+        if not wb and not ob:
+            ys = _rolling_mm_multi_pallas(x.reshape(-1, x.shape[-1]), ws,
+                                          offset, win,
+                                          bm=min(bm, x.shape[-2]), bn=bn,
+                                          bk=bk, interpret=interp)
+            ys = ys.reshape(ys.shape[0], axis_size, -1, win)
+            return jnp.moveaxis(ys, 0, 1), True
+        xx = x if xb else jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+        ww = (jnp.moveaxis(ws, 0, 1) if wb
+              else jnp.broadcast_to(ws[:, None],
+                                    (ws.shape[0], axis_size) + ws.shape[1:]))
+        oo = jnp.asarray(offset, jnp.int32)
+        if not ob:
+            oo = jnp.broadcast_to(oo[None], (axis_size,))
+        ys = _rolling_mm_batched_multi_pallas(xx, ww, oo, win, bm=bm, bn=bn,
+                                              bk=bk, interpret=interp)
+        return ys, True
+
+    return fwd(x, ws, jnp.asarray(offset, jnp.int32))
+
+
+def _multi_fwd_arm(x, ws, offset, win, backend, bm, bn, bk, assume_aligned):
+    b = resolve_backend(backend)
+    M, K = x.shape
+    uniform = len({w.shape for w in ws}) == 1
+    if (b == "pallas" and uniform
+            and _rolling_tileable(M, K, win, offset, bm, bn, bk,
+                                  assume_aligned)):
+        ys = _pallas_multi_fwd(x, jnp.stack(ws), offset, win, bm, bn, bk)
+        return tuple(ys[t] for t in range(len(ws)))
+    # jnp arm: a literal loop of the single-weight oracle — bitwise
+    # identical to T separate rolling_matmul calls, which is what keeps
+    # fused == extract exact on CPU when layers route through the multi op.
+    return tuple(ref.rolling_matmul_ref(x, w, offset, win) for w in ws)
+
+
+def _pallas_multi_dx(dys, ws, offset, win, bm, bn, bk):
+    """Batchable multi-step backward arm (mirrors :func:`_pallas_multi_fwd`;
+    ``dys`` stacked [T, M, win], returns the step-summed dx [M, K])."""
+    interp = interpret_mode()
+
+    @custom_batching.custom_vmap
+    def bwd(dys, ws, offset):
+        return _rolling_dx_multi_pallas(dys, ws, offset, win, bm=bm, bn=bn,
+                                        bk=bk, interpret=interp)
+
+    @bwd.def_vmap
+    def _rule(axis_size, in_batched, dys, ws, offset):  # noqa: ANN001
+        dyb, wb, ob = in_batched
+        if not wb and not ob:
+            d = jnp.moveaxis(dys, 0, 1)  # [B, T, M, win] -> [T, B, M, win]
+            d = d.reshape(d.shape[0], -1, d.shape[-1])
+            dx = _rolling_dx_multi_pallas(d, ws, offset, win,
+                                          bm=min(bm, dys.shape[-2]), bn=bn,
+                                          bk=bk, interpret=interp)
+            return dx.reshape(axis_size, -1, ws.shape[-2]), True
+        dd = dys if dyb else jnp.broadcast_to(dys[None],
+                                              (axis_size,) + dys.shape)
+        ww = (jnp.moveaxis(ws, 0, 1) if wb
+              else jnp.broadcast_to(ws[:, None],
+                                    (ws.shape[0], axis_size) + ws.shape[1:]))
+        oo = jnp.asarray(offset, jnp.int32)
+        if not ob:
+            oo = jnp.broadcast_to(oo[None], (axis_size,))
+        dx = _rolling_dx_batched_multi_pallas(dd, ww, oo, win, bm=bm, bn=bn,
+                                              bk=bk, interpret=interp)
+        return dx, True
+
+    return bwd(dys, ws, jnp.asarray(offset, jnp.int32))
+
+
+def _multi_dx_arm(dys, ws, offset, win, backend, bm, bn, bk, assume_aligned):
+    b = resolve_backend(backend)
+    M = dys[0].shape[0]
+    K = ws[0].shape[0]
+    bm_, bn_, bk_ = min(bm, M), min(bn, K), min(bk, win)
+    uniform = len({w.shape for w in ws}) == 1
+    tileable = (uniform and M % bm_ == 0 and K % bn_ == 0
+                and win % bk_ == 0
+                and _offset_aligned(offset, bk_, assume_aligned))
+    if b == "pallas" and tileable:
+        return _pallas_multi_dx(jnp.stack(dys), jnp.stack(ws), offset, win,
+                                bm, bn, bk)
+
+    def one(dy, w):
+        wsub = jax.lax.dynamic_slice_in_dim(w, offset, win, axis=1)
+        return jax.lax.dot_general(
+            dy, wsub, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dy.dtype)
+
+    # Per-step oracle terms summed pairwise in step order: for the gate/up
+    # pair (T=2) this is one f32 add, the same single add JAX's cotangent
+    # accumulation performs for two separate rolling_matmul calls.
+    out = one(dys[0], ws[0])
+    for dy, w in zip(dys[1:], ws[1:]):
+        out = out + one(dy, w)
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _rolling_mm_multi(x, ws, offset, win, backend, bm, bn, bk,
+                      assume_aligned):
+    return _multi_fwd_arm(x, ws, offset, win, backend, bm, bn, bk,
+                          assume_aligned)
+
+
+def _rolling_mm_multi_fwd(x, ws, offset, win, backend, bm, bn, bk,
+                          assume_aligned):
+    ys = _multi_fwd_arm(x, ws, offset, win, backend, bm, bn, bk,
+                        assume_aligned)
+    return ys, (x, ws, offset)
+
+
+def _rolling_mm_multi_bwd(win, backend, bm, bn, bk, assume_aligned, res,
+                          dys):
+    """dx accumulates across the T steps inside one kernel call (oracle:
+    pairwise sum of per-step dots); each dW is the same window scatter-add
+    as the single-weight VJP."""
+    x, ws, offset = res
+    dys = tuple(dys)
+    dx = _multi_dx_arm(dys, ws, offset, win, backend, bm, bn, bk,
+                       assume_aligned)
+    dws = []
+    for w, dy in zip(ws, dys):
+        dw_win = jax.lax.dot_general(
+            x, dy, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(w.dtype)
+        dws.append(jax.lax.dynamic_update_slice(
+            jnp.zeros(w.shape, dw_win.dtype), dw_win, (0, offset)))
+    d_off = np.zeros(np.shape(offset), jax.dtypes.float0)
+    return dx, tuple(dws), d_off
+
+
+_rolling_mm_multi.defvjp(_rolling_mm_multi_fwd, _rolling_mm_multi_bwd)
+
+
+def rolling_matmul_multi(x, ws, offset, win, backend=None, bm=None, bn=None,
+                         bk=None, assume_aligned=False):
+    """ys[t][M, win] = x[M, K] @ ws[t][K, offset : offset+win] for a tuple
+    of weights sharing one activation and one window — differentiable.
+
+    The K-step scan-body fusion: the gated MLP's gate/up pair (and any
+    other group of windowed matmuls against the same x and offset) runs as
+    ONE Pallas call per direction (``kernels.rolling_matmul.
+    rolling_matmul_multi`` forward, ``rolling_matmul_bwd.
+    rolling_matmul_dx_multi`` backward), whose grid gains a leading step
+    dimension so the next step's W column-block DMA overlaps the previous
+    step's MXU work and the x block load amortizes over steps.  The jnp arm
+    is a literal loop of the single-weight oracle, bitwise identical to T
+    separate :func:`rolling_matmul` calls — so routing layers through this
+    op cannot move fused-vs-extract numerics on CPU.  Under ``jax.vmap``
+    both Pallas halves lower to the batched-offset multi kernels (or fold
+    rows when weights and offset are shared).  ``None`` block args resolve
+    through :func:`autotune_blocks`; falls back to the oracle loop for
+    untileable shapes, non-uniform weight shapes, and unaligned/traced
+    offsets without ``assume_aligned``."""
+    ws = tuple(ws)
+    bm, bn, bk = _resolve_blocks(x.shape[-2], x.shape[-1], win, x.dtype,
+                                 backend, bm, bn, bk)
+    return _rolling_mm_multi(x, ws, offset, win, backend, bm, bn, bk,
+                             assume_aligned)

@@ -139,3 +139,115 @@ def rolling_matmul_batched_dx(dy, w, offsets, win, *, bm=128, bn=128,
         out_shape=jax.ShapeDtypeStruct((B, M, K), dy.dtype),
         interpret=interpret,
     )(off_blocks, dy, w)
+
+
+# ---------------------------------------------------------------------------
+# Multi-step arms: T windowed matmuls per client, per-client offsets
+# ---------------------------------------------------------------------------
+
+
+def _batched_mm_multi_kernel(off_ref, x_ref, w_ref, o_ref, acc_ref, *, nk):
+    k = pl.program_id(4)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0, 0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def rolling_matmul_batched_multi(x, ws, offsets, win, *, bm=128, bn=128,
+                                 bk=128, interpret=True):
+    """x [B,M,K]; ws [T,B,K,N]; offsets: int32 [B] (multiples of bn).
+
+    Returns ys [B, T, M, win] with ys[b, t] = x[b] @ ws[t, b][:, offsets[b] :
+    offsets[b]+win] — the batched-offset form of ``rolling_matmul_multi``:
+    each client runs its T-step group (gate/up pair) as one kernel instance
+    against its own window, keeping the staggered fused round single-call
+    per weight group.
+    """
+    T = ws.shape[0]
+    B, M, K = x.shape
+    bm, bn, bk = min(bm, M), min(bn, win), min(bk, K)
+    assert win % bn == 0 and M % bm == 0 and K % bk == 0
+    nk = K // bk
+    off_blocks = jnp.asarray(offsets, jnp.int32) // bn
+
+    grid_spec = prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(B, T, M // bm, win // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda b, t, i, j, k, off: (b, i, k)),
+            pl.BlockSpec((1, 1, bk, bn),
+                         lambda b, t, i, j, k, off: (t, b, k, off[b] + j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, bn),
+                               lambda b, t, i, j, k, off: (b, t, i, j)),
+        scratch_shapes=[vmem((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_batched_mm_multi_kernel, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, M, win), x.dtype),
+        interpret=interpret,
+    )(off_blocks, x, ws)
+
+
+def _batched_dx_multi_kernel(off_ref, dy_ref, w_ref, o_ref, acc_ref, *,
+                             nt, nj):
+    t = pl.program_id(3)
+    j = pl.program_id(4)
+
+    @pl.when(jnp.logical_and(t == 0, j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        dy_ref[0, 0], w_ref[0, 0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(t == nt - 1, j == nj - 1))
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def rolling_matmul_batched_dx_multi(dys, ws, offsets, win, *, bm=128,
+                                    bn=128, bk=128, interpret=True):
+    """dys [B,T,M,win]; ws [T,B,K,N]; offsets: int32 [B] (multiples of bk).
+
+    Returns dx [B, M, K] with dx[b] = sum_t dys[b, t] @ ws[t, b][:,
+    offsets[b] : offsets[b]+win]^T — the step-accumulated backward of
+    ``rolling_matmul_batched_multi``, mirroring ``rolling_matmul_dx_multi``
+    with the leading batch dimension and a per-client prefetched offset row.
+    """
+    B, T, M = dys.shape[0], dys.shape[1], dys.shape[2]
+    K = ws.shape[2]
+    bm, bn, bk = min(bm, M), min(bn, K), min(bk, win)
+    assert M % bm == 0 and K % bn == 0 and win % bk == 0
+    nj = win // bk
+    off_blocks = jnp.asarray(offsets, jnp.int32) // bk
+
+    grid_spec = prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(B, M // bm, K // bn, T, nj),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk),
+                         lambda b, i, k, t, j, off: (b, t, i, j)),
+            pl.BlockSpec((1, 1, bn, bk),
+                         lambda b, i, k, t, j, off: (t, b, k, off[b] + j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda b, i, k, t, j, off: (b, i, k)),
+        scratch_shapes=[vmem((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_batched_dx_multi_kernel, nt=T, nj=nj),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, M, K), dys.dtype),
+        interpret=interpret,
+    )(off_blocks, dys, ws)

@@ -76,3 +76,64 @@ def rolling_matmul_dx(dy, w, offset, win, *, bm=128, bn=128, bk=128,
         out_shape=jax.ShapeDtypeStruct((M, K), dy.dtype),
         interpret=interpret,
     )(off_blocks, dy, w)
+
+
+# ---------------------------------------------------------------------------
+# Multi-step arm: one dx accumulated across T cotangent/weight pairs
+# ---------------------------------------------------------------------------
+
+
+def _rolling_dx_multi_kernel(off_ref, dy_ref, w_ref, o_ref, acc_ref, *,
+                             nt, nj):
+    t = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(t == 0, j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        dy_ref[0], w_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(t == nt - 1, j == nj - 1))
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def rolling_matmul_dx_multi(dys, ws, offset, win, *, bm=128, bn=128, bk=128,
+                            interpret=True):
+    """dys [T,M,win]; ws [T,K,N]; offset: int32 scalar (multiple of bk).
+
+    Returns dx [M, K] = sum_t dys[t] @ ws[t][:, offset:offset+win]^T — the
+    backward half of the multi-step forward (``rolling_matmul_multi``): the
+    T per-step input gradients accumulate in the SAME VMEM scratch across
+    the step grid dimension, so the fused pair's dx needs one kernel call
+    and no intermediate [T, M, K] stack.  Step/window blocks stream through
+    the usual cross-iteration double buffering (the next (t, j) W fetch
+    overlaps the current dot).
+    """
+    T, M = dys.shape[0], dys.shape[1]
+    K = ws.shape[1]
+    bm, bn, bk = min(bm, M), min(bn, K), min(bk, win)
+    assert M % bm == 0 and K % bn == 0 and win % bk == 0
+    nj = win // bk
+    off_blocks = jnp.asarray(offset, jnp.int32)[None] // bk
+
+    grid_spec = prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(M // bm, K // bn, T, nj),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda i, k, t, j, off: (t, i, j)),
+            pl.BlockSpec((1, bn, bk),
+                         lambda i, k, t, j, off: (t, k, off[0] + j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, k, t, j, off: (i, k)),
+        scratch_shapes=[vmem((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_rolling_dx_multi_kernel, nt=T, nj=nj),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, K), dys.dtype),
+        interpret=interpret,
+    )(off_blocks, dys, ws)

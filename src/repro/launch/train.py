@@ -79,6 +79,27 @@ def main():
                          "offset kernels; 'on' forces it, 'off' keeps the "
                          "extract-based client phase (see the README "
                          "fused-coverage matrix)")
+    ap.add_argument("--kernel-block", default=None, metavar="BMxBNxBK",
+                    help="override the rolling-matmul block autotuner with "
+                         "a fixed (bm, bn, bk) triple, e.g. 128x128x64 "
+                         "(also accepts comma-separated); default: "
+                         "deterministic autotune from the operand-dim "
+                         "divisors, cached per (shape, dtype, backend)")
+    ap.add_argument("--layer-unroll", default=None, metavar="N|full",
+                    help="unroll the model's layer scan (N layers per "
+                         "iteration, or 'full' to inline it).  Inlining "
+                         "removes the rolled scan's per-layer carry "
+                         "copies and weight-layout round-trips — the CPU "
+                         "lever behind the fused round's bench win — at "
+                         "the cost of larger HLO and, for MoE archs, "
+                         "~1-ulp output moves vs the rolled program. "
+                         "Default: rolled")
+    ap.add_argument("--uplink-compression", default=None,
+                    choices=["bf16"],
+                    help="window mode: round each client delta to bf16 on "
+                         "the simulated uplink (half the client->server "
+                         "bytes; f32 accumulation, one final rounding). "
+                         "Default: exact f32 uplink, bitwise fused==extract")
     ap.add_argument("--client-opt", default="sgd",
                     choices=sorted(api.CLIENT_OPTS),
                     help="local-step optimizer (paper: sgd)")
@@ -154,10 +175,22 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
+    if args.kernel_block:
+        from repro.kernels import dispatch
+        blocks = args.kernel_block.replace("x", ",").split(",")
+        if len(blocks) != 3:
+            raise SystemExit("--kernel-block expects BMxBNxBK, e.g. "
+                             "128x128x64")
+        dispatch.set_block_override(tuple(int(b) for b in blocks))
+
     cfg = get_reduced_config(args.arch) if args.reduced \
         else get_config(args.arch)
+    unroll_kw = {}
+    if args.layer_unroll:
+        unroll_kw["layer_unroll"] = (True if args.layer_unroll == "full"
+                                     else int(args.layer_unroll))
     model = build_model(cfg, moe_path="dense" if args.reduced else "dropping",
-                        remat=not args.reduced)
+                        remat=not args.reduced, **unroll_kw)
     params = model.init(jax.random.PRNGKey(args.seed))
     axes_kw = {"axes": tuple(args.axes)} if args.axes else {}
     scfg = SubmodelConfig(scheme=args.scheme, capacity=args.capacity,
@@ -173,7 +206,8 @@ def main():
                         server_opt=args.server_opt,
                         kernel_backend=args.kernel_backend,
                         mesh=mesh, mesh_agg=args.mesh_agg,
-                        fused_forward=args.fused_forward)
+                        fused_forward=args.fused_forward,
+                        uplink_compression=args.uplink_compression)
 
     vision = (cfg.vision_patches, cfg.vision_d) if cfg.vision_stub else None
     it = lm_batches(cfg.vocab, (args.local_steps, args.clients, args.mb),

@@ -214,15 +214,21 @@ def mlp_apply_rolling(p, x, offset, win, act="silu", backend=None,
     p: full-shaped mlp params; offset: int32 (align-multiple); win: static.
     ``assume_aligned=True`` lets *traced* offsets take the fused arm — only
     set it when the window scheme aligns offsets to the 128-lane block.
+
+    The gate/up pair shares one x and one window, so it routes through the
+    multi-step arm (``dispatch.rolling_matmul_multi``): one Pallas call for
+    both matmuls (the step grid dimension overlaps step t+1's W-column DMA
+    with step t's compute), and on the jnp arm a literal loop of the
+    single-weight oracle — bitwise identical to two separate calls.
     """
-    from repro.kernels.dispatch import rolling_matmul  # lazy: no import cycle
+    from repro.kernels.dispatch import \
+        rolling_matmul_multi  # lazy: no import cycle
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    g = act_fn(act)(rolling_matmul(x2, p["w_gate"], offset, win,
-                                   backend=backend,
-                                   assume_aligned=assume_aligned))
-    u = rolling_matmul(x2, p["w_up"], offset, win, backend=backend,
-                       assume_aligned=assume_aligned)
+    gy, u = rolling_matmul_multi(x2, (p["w_gate"], p["w_up"]), offset, win,
+                                 backend=backend,
+                                 assume_aligned=assume_aligned)
+    g = act_fn(act)(gy)
     w_down = jax.lax.dynamic_slice_in_dim(p["w_down"], offset, win, axis=0)
     out = (g * u) @ w_down
     return out.reshape(*lead, out.shape[-1])

@@ -199,6 +199,17 @@ class Model:
     moe_path: str = "dropping"
     remat: bool = True
     param_dtype: Any = jnp.float32
+    #: ``unroll`` for the layer scan in :meth:`_run_stacks`.  ``True``
+    #: fully inlines the loop, eliminating the per-layer carry copies and
+    #: weight-stack layout round-trips of a rolled scan — the decisive
+    #: lever for the fused window round on CPU (see benchmarks/run.py
+    #: ``fed_round_fused``).  Default rolled: inlining perturbs XLA's dot
+    #: fusion enough to move MoE outputs by ~1 ulp between program
+    #: variants (see test_fused_forward's mixtral bitwise pin), and at
+    #: paper scale a rolled scan keeps HLO small and compiles fast — so
+    #: callers opt in per run, applying the same setting to every arm
+    #: they compare.
+    layer_unroll: Any = 1
     _axes_cache: Any = None
 
     # -- params ------------------------------------------------------------
@@ -286,7 +297,8 @@ class Model:
 
             fn = jax.checkpoint(body) if (self.remat and mode == "train") \
                 else body
-            (h, aux_total), ys = jax.lax.scan(fn, (h, aux_total), xs)
+            (h, aux_total), ys = jax.lax.scan(fn, (h, aux_total), xs,
+                                              unroll=self.layer_unroll)
             if mode in ("prefill", "decode") and ys:
                 new_caches[stack] = ys
         return h, aux_total, new_caches

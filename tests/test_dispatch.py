@@ -276,3 +276,139 @@ def test_server_opt_round_honors_importance_scheme():
     o = np.asarray(offs[key])
     assert (o >= 0).all() and (o + fed.scheme.sizes[key] <= 33).all()
     del static
+
+
+# -- block autotuner: hypothesis property tests -------------------------------
+# hypothesis is optional (pyproject.toml [test] extra): degrade to per-test
+# skips, keeping the rest of this module collectable without it.
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # pragma: no cover
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip("hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _NoSt:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _NoSt()
+
+_dims = st.integers(min_value=1, max_value=1024)
+
+
+@pytest.fixture
+def fresh_tuner():
+    """Isolate autotune cache + override; restore process state after."""
+    dispatch.clear_block_cache()
+    dispatch.set_block_override(None)
+    yield
+    dispatch.clear_block_cache()
+    dispatch.set_block_override(None)
+
+
+@given(M=_dims, K=_dims, win=_dims)
+@settings(max_examples=100, deadline=None)
+def test_autotune_blocks_divide_and_cover(M, K, win):
+    """Every tuned (bm, bn, bk) exactly tiles its dim (the kernels assert
+    dim % block == 0), stays within the MXU-tile cap, prefers the f32
+    sublane multiple when the dim allows one, and fits the VMEM budget."""
+    dispatch.clear_block_cache()
+    bm, bn, bk = dispatch.autotune_blocks(M, K, win)
+    assert M % bm == 0 and win % bn == 0 and K % bk == 0
+    assert 1 <= bm <= 128 and 1 <= bn <= 128 and 1 <= bk <= 128
+    if M % 8 == 0:
+        assert bm % 8 == 0
+    if win % 8 == 0:
+        assert bn % 8 == 0
+    assert dispatch._vmem_block_bytes(bm, bn, bk, 4) \
+        <= dispatch._VMEM_BUDGET_BYTES or bk <= 8
+
+
+@given(M=_dims, K=_dims, win=_dims,
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+@settings(max_examples=50, deadline=None)
+def test_autotune_blocks_deterministic_per_key(M, K, win, dtype):
+    """Same key -> same triple, with or without the memo: the tuner never
+    times anything, so two processes (or a cold and a warm cache) must
+    agree."""
+    dispatch.clear_block_cache()
+    cold = dispatch.autotune_blocks(M, K, win, dtype)
+    warm = dispatch.autotune_blocks(M, K, win, dtype)
+    dispatch.clear_block_cache()
+    recold = dispatch.autotune_blocks(M, K, win, dtype)
+    assert cold == warm == recold
+
+
+@given(M=st.integers(2, 512), K=st.integers(2, 512), win=st.integers(2, 512))
+@settings(max_examples=50, deadline=None)
+def test_autotune_cache_never_crosses_keys(M, K, win):
+    """A poisoned memo entry for one key must never leak into a different
+    shape/dtype/backend key."""
+    dispatch.clear_block_cache()
+    poisoned = (-1, -1, -1)
+    backend = dispatch.resolve_backend(None)
+    dispatch._AUTOTUNE_CACHE[((M, K, win), "float32", backend)] = poisoned
+    # the poisoned key itself is returned verbatim (proves exact keying) ...
+    assert dispatch.autotune_blocks(M, K, win, "float32") == poisoned
+    # ... while neighbouring shape keys and the other dtype are untouched
+    for other in ((M + 1, K, win), (M, K + 1, win), (M, K, win + 1)):
+        got = dispatch.autotune_blocks(*other, "float32")
+        assert got != poisoned
+        assert other[0] % got[0] == 0 and other[2] % got[1] == 0 \
+            and other[1] % got[2] == 0
+    assert dispatch.autotune_blocks(M, K, win, "bfloat16") != poisoned
+    dispatch.clear_block_cache()
+
+
+@given(M=_dims, K=_dims, win=_dims,
+       ov=st.tuples(st.integers(1, 256), st.integers(1, 256),
+                    st.integers(1, 256)))
+@settings(max_examples=50, deadline=None)
+def test_block_override_wins_over_tuner(M, K, win, ov):
+    """Resolution order: explicit call args > set_block_override > tuner.
+    The override must never be written into the autotune cache."""
+    dispatch.clear_block_cache()
+    dispatch.set_block_override(None)
+    try:
+        tuned = dispatch._resolve_blocks(M, K, win, "float32", None,
+                                         None, None, None)
+        dispatch.set_block_override(ov)
+        assert dispatch._resolve_blocks(M, K, win, "float32", None,
+                                        None, None, None) == ov
+        # explicit per-call args still beat the override
+        assert dispatch._resolve_blocks(M, K, win, "float32", None,
+                                        2, 3, 4) == (2, 3, 4)
+        # partial explicit args: the missing slots come from the override
+        assert dispatch._resolve_blocks(M, K, win, "float32", None,
+                                        7, None, None) == (7, ov[1], ov[2])
+        assert ov not in dispatch._AUTOTUNE_CACHE.values() or ov == tuned
+        # clearing the override restores the tuned choice exactly
+        dispatch.set_block_override(None)
+        assert dispatch._resolve_blocks(M, K, win, "float32", None,
+                                        None, None, None) == tuned
+    finally:
+        dispatch.set_block_override(None)
+        dispatch.clear_block_cache()
+
+
+def test_block_override_validates(fresh_tuner):
+    with pytest.raises(ValueError, match="block sizes"):
+        dispatch.set_block_override((0, 8, 8))
+    assert dispatch.set_block_override((8, 16, 32)) == (8, 16, 32)
+    dispatch.set_block_override(None)
+
+
+def test_autotuned_rolling_matmul_matches_oracle(fresh_tuner):
+    """End to end: dispatch.rolling_matmul with tuner-chosen blocks (block
+    args left None) == the jnp oracle on an unaligned-tail shape."""
+    M, K, N, off, win = 96, 160, 288, 32, 96
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    y = dispatch.rolling_matmul(x, w, off, win, backend="pallas")
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.rolling_matmul_ref(x, w, off,
+                                                                 win)),
+                               rtol=1e-4, atol=1e-3)

@@ -351,6 +351,29 @@ def test_staggered_fused_mla_heads_bitwise():
     assert _maxdelta(pf, pe) == 0.0
 
 
+_EXPERTS_MLA_CACHE = []
+
+
+def _experts_mla_maxdelta():
+    """fused-vs-extract round maxdelta for the one known-caveat point: an
+    ``experts`` window on the MLA+shared+sigmoid family, K>1 local steps.
+    Computed once, shared by the tolerance pin and the 0-ulp xfail."""
+    if not _EXPERTS_MLA_CACHE:
+        cfg = replace(get_reduced_config("deepseek_v3_671b"), n_layers=2)
+        m = build_model(cfg, remat=False)
+        params = m.init(jax.random.PRNGKey(0))
+        scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
+                              clients_per_round=4, client_lr=0.1,
+                              axes=("experts",))
+        fused, extract = _pair(m, scfg)
+        batch = _batch(cfg)
+        pf, _ = jax.jit(fused.round)(params, batch, 0, jax.random.PRNGKey(1))
+        pe, _ = jax.jit(extract.round)(params, batch, 0,
+                                       jax.random.PRNGKey(1))
+        _EXPERTS_MLA_CACHE.append(_maxdelta(pf, pe))
+    return _EXPERTS_MLA_CACHE[0]
+
+
 def test_fused_experts_window_mla_family_close():
     """Known f32 caveat (pre-dates the fused staggered arm): an `experts`
     window on the MLA+shared+sigmoid family with K>1 local steps agrees
@@ -358,17 +381,19 @@ def test_fused_experts_window_mla_family_close():
     client phase differently for the two program shapes.  Pinned here as a
     tolerance so a real regression (>> 1 ulp) still fails; every other
     family/axis combination in this file is pinned at exactly 0."""
-    cfg = replace(get_reduced_config("deepseek_v3_671b"), n_layers=2)
-    m = build_model(cfg, remat=False)
-    params = m.init(jax.random.PRNGKey(0))
-    scfg = SubmodelConfig(scheme="rolling", capacity=0.5, local_steps=2,
-                          clients_per_round=4, client_lr=0.1,
-                          axes=("experts",))
-    fused, extract = _pair(m, scfg)
-    batch = _batch(cfg)
-    pf, _ = jax.jit(fused.round)(params, batch, 0, jax.random.PRNGKey(1))
-    pe, _ = jax.jit(extract.round)(params, batch, 0, jax.random.PRNGKey(1))
-    assert _maxdelta(pf, pe) <= 5e-7
+    assert _experts_mla_maxdelta() <= 5e-7
+
+
+@pytest.mark.xfail(strict=True,
+                   reason="documented caveat: experts windows with K>1 on "
+                          "the MLA family agree with extract to f32 "
+                          "roundoff only, not 0 ulp.  If this starts "
+                          "PASSING (strict xfail -> suite failure), XLA "
+                          "stopped reassociating the two program shapes "
+                          "differently: delete both pins and fold the arch "
+                          "into the bitwise MULTI_AXIS matrix above.")
+def test_fused_experts_window_mla_family_zero_ulp():
+    assert _experts_mla_maxdelta() == 0.0
 
 
 # -- resolution / validation --------------------------------------------------
